@@ -1,0 +1,83 @@
+"""Paper Fig. 12 + Table 3 — end-to-end eigensolver.
+
+Fig. 12: SEM (tiered, budgeted device memory) vs IM (everything in the fast
+tier) Krylov–Schur runtime ratio for several #eigenvalues — the paper's
+40–60 % claim. On CPU both variants run the same FLOPs; the SEM runtime is
+modeled as compute + tier traffic at the paper's measured tier bandwidth,
+with the traffic taken from the byte-exact TieredStore accounting.
+
+Table 3: resource consumption of the scaled page-graph analogue: runtime,
+device-memory high-water mark, tier reads, tier writes + the write/read
+ratio (paper: 145 TB read, 4 TB written, 120 GB RAM, 4.2 h).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GraphOperator, TieredStore, eigsh, svds
+from repro.graphs import clustered_web_graph, normalized_adjacency, \
+    pack_tiles, rmat_graph
+
+SLOW_TIER_BW = 10.9e9
+
+
+def run(csv_rows: list):
+    n, nnz = 20000, 240000
+    r, c, v = rmat_graph(n, nnz, seed=3, symmetric=True)
+    r2, c2, v2 = normalized_adjacency(n, r, c, v)
+    tm = pack_tiles(n, n, r2, c2, v2, block_shape=(64, 64), min_block_nnz=4)
+
+    # --- Fig 12: SEM vs IM for several ev counts
+    for nev in (4, 8, 16):
+        store = TieredStore()
+        op = GraphOperator(tm, store=store, impl="ref")
+        t0 = time.perf_counter()
+        res = eigsh(op, nev, block_size=4, tol=1e-6, max_restarts=100,
+                    store=store, impl="ref")
+        t_compute = time.perf_counter() - t0
+        s = store.stats
+        io = s.host_bytes_read + s.host_bytes_written
+        t_sem = t_compute + io / SLOW_TIER_BW
+        ratio = t_compute / t_sem
+        csv_rows.append(("fig12_eigensolver", f"nev={nev}",
+                         t_sem * 1e6,
+                         f"sem_over_im={ratio:.2f},converged={res.converged},"
+                         f"restarts={res.n_restarts}"))
+
+    # --- §2-related-work comparison: Krylov–Schur vs LOBPCG I/O
+    #     (the paper picks KS for least I/O; LOBPCG [31] trades a tiny
+    #     working set for more operator applications)
+    from repro.core.lobpcg import lobpcg
+    st_lo = TieredStore()
+    t0 = time.perf_counter()
+    res_lo = lobpcg(GraphOperator(tm, store=st_lo, impl="ref"), 4,
+                    block_size=8, tol=1e-4, max_iters=150, which="LA",
+                    store=st_lo)
+    t_lo = time.perf_counter() - t0
+    csv_rows.append(("related_lobpcg_vs_ks", "nev=4", t_lo * 1e6,
+                     f"ops={res_lo.n_ops},workset_cols={res_lo.m_subspace},"
+                     f"converged={res_lo.converged}"))
+
+    # --- Table 3: scaled page-graph analogue (directed → SVD)
+    np_, nnzp = 34000, 1290000          # 1e5× scaled page graph
+    r, c, v = clustered_web_graph(np_, nnzp, seed=4)
+    tma = pack_tiles(np_, np_, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    tmat = pack_tiles(np_, np_, c, r, v, block_shape=(64, 64), min_block_nnz=4)
+    store = TieredStore(device_budget_bytes=64 << 20)
+    t0 = time.perf_counter()
+    res = svds(GraphOperator(tma, store=store, impl="ref"),
+               GraphOperator(tmat, store=store, impl="ref"),
+               8, block_size=2, tol=1e-6, max_restarts=60,
+               store=store, impl="ref")
+    wall = time.perf_counter() - t0
+    s = store.stats
+    csv_rows.append(("table3_page_scaled", "nev=8", wall * 1e6,
+                     f"read_bytes={s.host_bytes_read},"
+                     f"write_bytes={s.host_bytes_written},"
+                     f"write_read_ratio={s.host_bytes_written / max(s.host_bytes_read, 1):.4f},"
+                     f"device_hwm_bytes={store.device_bytes()},"
+                     f"converged={res.converged}"))
+    return csv_rows

@@ -1,0 +1,34 @@
+"""§Roofline — reads results/dryrun.jsonl (produced by launch.dryrun) and
+emits one row per (arch × shape × mesh) with the three roofline terms."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun.jsonl")
+
+
+def run(csv_rows: list):
+    if not os.path.exists(RESULTS):
+        csv_rows.append(("roofline", "missing", 0.0,
+                         "run: python -m repro.launch.dryrun --all"))
+        return csv_rows
+    with open(RESULTS) as f:
+        for line in f:
+            r = json.loads(line)
+            if "error" in r:
+                csv_rows.append((f"roofline_{r['mesh']}",
+                                 f"{r['arch']}/{r['shape']}", 0.0,
+                                 f"ERROR={r['error'][:60]}"))
+                continue
+            csv_rows.append((
+                f"roofline_{r['mesh']}", f"{r['arch']}/{r['shape']}",
+                r["step_time_bound_s"] * 1e6,
+                f"compute_s={r['compute_s']:.3e},"
+                f"memory_s={r['memory_s']:.3e},"
+                f"collective_s={r['collective_s']:.3e},"
+                f"dominant={r['dominant']},"
+                f"roofline_frac={r['roofline_fraction']:.4f},"
+                f"useful_ratio={r['useful_ratio']:.3f}"))
+    return csv_rows

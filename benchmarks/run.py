@@ -1,0 +1,27 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,case,us_per_call,derived`` CSV. Fast by construction (scaled-
+down problem sizes; the full-scale numbers live in the dry-run/roofline
+path).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_spmm, bench_tasops, bench_eigen, \
+        bench_roofline
+    rows: list = []
+    mods = {"spmm": bench_spmm, "tasops": bench_tasops,
+            "eigen": bench_eigen, "roofline": bench_roofline}
+    selected = sys.argv[1:] or list(mods)
+    for name in selected:
+        mods[name].run(rows)
+    print("name,case,us_per_call,derived")
+    for name, case, us, derived in rows:
+        print(f"{name},{case},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

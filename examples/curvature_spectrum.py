@@ -1,0 +1,44 @@
+"""Beyond-paper integration: point the FlashEigen solver at an LM's loss
+curvature (Hessian spectrum via matrix-free HVPs).
+
+    PYTHONPATH=src python examples/curvature_spectrum.py
+
+The same Block Krylov-Schur machinery that eigendecomposes billion-node
+graphs here estimates the top loss-curvature eigenvalues of a (reduced)
+assigned architecture — the LinearOperator abstraction is what makes the
+paper's technique a first-class framework feature (DESIGN.md §4).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import HvpOperator, eigsh
+from repro.models import transformer as tf
+
+
+def main():
+    cfg = configs.reduced("qwen2-1.5b")
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                               jnp.int32),
+    }
+
+    def loss(p):
+        return tf.loss_fn(p, cfg, batch)
+
+    op = HvpOperator(loss, params, pad_to=8)
+    print(f"parameter space dimension: {op.n_logical:,}")
+    res = eigsh(op, 4, block_size=2, tol=1e-3, max_restarts=40,
+                which="LA", impl="ref")
+    print("top Hessian eigenvalues:", np.round(res.eigenvalues, 4))
+    print(f"restarts={res.n_restarts} HVP-block-calls={res.n_ops}")
+    assert np.isfinite(res.eigenvalues).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: compute 8 eigenvalues of a power-law graph out-of-core.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds an RMAT graph, packs the block-sparse matrix image, runs the
+tiered (out-of-core) Block Krylov-Schur eigensolver, and checks the
+spectrum against scipy. Prints the byte-exact tier I/O accounting —
+the paper's Table-3 read/write shape at laptop scale.
+"""
+import numpy as np
+import jax.numpy as jnp
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+from repro.graphs import rmat_graph, normalized_adjacency, pack_tiles
+from repro.core import GraphOperator, TieredStore, eigsh, true_residuals
+
+
+def main():
+    n, nnz, nev = 5000, 60000, 8
+    print(f"building RMAT graph: {n} vertices, ~{nnz} edges")
+    r, c, v = rmat_graph(n, nnz, seed=1, symmetric=True)
+    r, c, v = normalized_adjacency(n, r, c, v)
+    image = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    print(f"matrix image: {image.nblocks} dense blocks + "
+          f"{image.coo_vals.size} COO entries, "
+          f"{image.nbytes_image()/1e6:.1f} MB")
+
+    # device tier budgeted below the subspace size → genuinely out-of-core
+    store = TieredStore(device_budget_bytes=2 * n * 4 * 4)
+    op = GraphOperator(image, store=store, impl="ref")
+    res = eigsh(op, nev, block_size=4, tol=1e-6, max_restarts=100,
+                which="LM", store=store, impl="ref")
+    print(f"eigenvalues: {np.round(np.sort(res.eigenvalues), 5)}")
+    print(f"converged={res.converged} restarts={res.n_restarts} "
+          f"SpMM-calls={res.n_ops}")
+
+    a = sp.coo_matrix((v, (r, c)), shape=(n, n)).tocsr()
+    w = np.sort(spla.eigsh(a, k=nev, which="LM", return_eigenvectors=False))
+    err = np.abs(np.sort(res.eigenvalues) - w).max()
+    print(f"max |err| vs scipy: {err:.2e}")
+    tr = true_residuals(op, jnp.asarray(res.eigenvectors), res.eigenvalues)
+    print(f"max true residual:  {tr.max():.2e}")
+
+    s = store.stats
+    print(f"tier I/O: read {s.host_bytes_read/1e6:.1f} MB, "
+          f"wrote {s.host_bytes_written/1e6:.1f} MB "
+          f"(write/read = {s.host_bytes_written/max(s.host_bytes_read,1):.4f};"
+          f" paper Table 3: 0.028)")
+    assert err < 1e-4
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Config registry: assigned architectures + the paper's own graph configs."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_applicable
+from repro.configs.grok_1_314b import CONFIG as grok_1_314b
+from repro.configs.arctic_480b import CONFIG as arctic_480b
+from repro.configs.hubert_xlarge import CONFIG as hubert_xlarge
+from repro.configs.llama_3_2_vision_90b import CONFIG as llama_3_2_vision_90b
+from repro.configs.yi_9b import CONFIG as yi_9b
+from repro.configs.qwen2_1_5b import CONFIG as qwen2_1_5b
+from repro.configs.h2o_danube_3_4b import CONFIG as h2o_danube_3_4b
+from repro.configs.mistral_large_123b import CONFIG as mistral_large_123b
+from repro.configs.recurrentgemma_2b import CONFIG as recurrentgemma_2b
+from repro.configs.mamba2_780m import CONFIG as mamba2_780m
+from repro.configs import flasheigen
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c for c in [
+        grok_1_314b, arctic_480b, hubert_xlarge, llama_3_2_vision_90b,
+        yi_9b, qwen2_1_5b, h2o_danube_3_4b, mistral_large_123b,
+        recurrentgemma_2b, mamba2_780m,
+    ]
+}
+
+GRAPHS = flasheigen.GRAPHS
+
+
+def get(name: str) -> ArchConfig:
+    return ARCHS[name]
+
+
+def reduced(name: str) -> ArchConfig:
+    """Smoke-test-scale config of the same family (CPU, one step)."""
+    c = ARCHS[name]
+    pat = len(c.pattern)
+    kv = max(1, min(c.n_kv_heads, 2))
+    heads = max(kv, 4 - (4 % kv))
+    return dataclasses.replace(
+        c,
+        name=c.name + "-reduced",
+        n_layers=pat + min(2, max(1, c.n_layers % pat or 2)),
+        d_model=64,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=0 if c.d_ff == 0 else 128,
+        moe_d_ff=0 if c.moe_d_ff == 0 else 96,
+        vocab_size=256,
+        n_experts=0 if c.n_experts == 0 else 4,
+        capacity_factor=8.0,   # no token dropping at smoke scale →
+        # prefill/decode exactly match the full forward (capacity dropping
+        # is order-dependent and intentionally kept at production scale)
+        window=32,
+        ssm_state=0 if c.ssm_state == 0 else 16,
+        ssm_head_dim=16,
+        ssm_chunk=8,
+        rglru_width=0 if c.rglru_width == 0 else 64,
+        n_frontend_tokens=0 if c.n_frontend_tokens == 0 else 16,
+        param_dtype="float32",
+        use_fsdp=False,
+        remat=False,
+    )
+
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+           "ARCHS", "GRAPHS", "get", "reduced"]

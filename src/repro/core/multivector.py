@@ -1,0 +1,231 @@
+"""Out-of-core TAS MultiVector — the paper's §3.4 vector subspace.
+
+The Krylov subspace S ∈ R^{n×m} is stored as NB column blocks of width b
+(one "TAS matrix" per block, each a separate object in the TieredStore — the
+analogue of one SAFS file per matrix, §3.4.1). The eleven Anasazi MultiVector
+operations of Table 1 are implemented block-streamed:
+
+  * the *group decomposition* of Fig. 5 bounds fast-tier memory: operations
+    touching many blocks (MvTimesMatAddMv / MvTransMv) stream the blocks in
+    groups of `group_size`, materializing only partial results;
+  * MvScale is *lazy* — a scalar per block folded into the next consumer
+    (the paper's lazy evaluation, §3.4.4), costing zero I/O;
+  * the newest block is pinned in the device tier (most-recent-block cache);
+  * transpose/CloneView share `data_id` with their parent so the cache
+    recognizes identical bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiered import TieredStore, DEVICE, HOST
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class _Block:
+    name: str
+    ncols: int
+    scale: float = 1.0   # lazy MvScale factor
+
+
+class MultiVector:
+    """A tall-and-skinny (n × m) matrix as a sequence of column blocks."""
+
+    _counter = 0
+
+    def __init__(self, store: TieredStore, n: int, *, name: str | None = None,
+                 group_size: int = 8, impl: kops.Impl = "auto"):
+        if name is None:
+            MultiVector._counter += 1
+            name = f"mv{MultiVector._counter}"
+        self.store = store
+        self.n = n
+        self.name = name
+        self.group_size = group_size
+        self.impl = impl
+        self._blocks: List[_Block] = []
+
+    # ------------------------------------------------------------------ basics
+    @property
+    def ncols(self) -> int:
+        return sum(b.ncols for b in self._blocks)
+
+    @property
+    def nblocks(self) -> int:
+        return len(self._blocks)
+
+    def block_widths(self) -> List[int]:
+        return [b.ncols for b in self._blocks]
+
+    def _block_name(self, i: int) -> str:
+        return self._blocks[i].name
+
+    def block(self, i: int) -> jnp.ndarray:
+        """Materialize block i (applies any lazy scale)."""
+        b = self._blocks[i]
+        val = self.store.get(b.name)
+        if b.scale != 1.0:
+            val = b.scale * val
+        return val
+
+    def append_block(self, arr: jnp.ndarray, *, pin_recent: bool = True) -> None:
+        """Append a new rightmost block; pins it (most-recent-block cache)
+        and demotes the previously pinned block to the host tier."""
+        assert arr.shape[0] == self.n, (arr.shape, self.n)
+        idx = len(self._blocks)
+        name = f"{self.name}/b{idx}"
+        self.store.put(name, jnp.asarray(arr, jnp.float32))
+        if pin_recent:
+            if idx > 0:
+                prev = self._blocks[-1].name
+                self.store.unpin(prev)
+                self.store.demote(prev)
+            self.store.pin(name)
+        self._blocks.append(_Block(name, int(arr.shape[1])))
+
+    def set_block(self, i: int, arr: jnp.ndarray) -> None:
+        """Anasazi SetBlock: overwrite one block in place."""
+        b = self._blocks[i]
+        assert arr.shape == (self.n, b.ncols)
+        self.store.put(b.name, jnp.asarray(arr, jnp.float32))
+        b.scale = 1.0
+
+    def delete(self) -> None:
+        for b in self._blocks:
+            self.store.delete(b.name)
+        self._blocks.clear()
+
+    # --------------------------------------------------------------- Table 1
+    def mv_random(self, key: jax.Array, widths: Sequence[int]) -> None:
+        """MvRandom: (re)initialize blocks with random values."""
+        self.delete()
+        for w in widths:
+            key, sub = jax.random.split(key)
+            self.append_block(jax.random.normal(sub, (self.n, w), jnp.float32))
+
+    def mv_scale(self, factors: Sequence[float] | float) -> None:
+        """MvScale1 — lazy: fold the scalar into block metadata (zero I/O)."""
+        if np.isscalar(factors):
+            for b in self._blocks:
+                b.scale *= float(factors)
+        else:
+            assert len(factors) == self.nblocks
+            for b, f in zip(self._blocks, factors):
+                b.scale *= float(f)
+
+    def mv_scale_diag(self, vec: jnp.ndarray) -> None:
+        """MvScale2: BB <- AA diag(vec) — materializes (per-column scales)."""
+        off = 0
+        for i, b in enumerate(self._blocks):
+            blk = self.block(i) * vec[off:off + b.ncols][None, :]
+            self.set_block(i, blk)
+            off += b.ncols
+
+    def mv_times_mat(self, small: jnp.ndarray, *, alpha: float = 1.0,
+                     beta: float = 0.0, c0: jnp.ndarray | None = None
+                     ) -> jnp.ndarray:
+        """MvTimesMatAddMv: returns alpha * self @ small + beta * c0, where
+        small is (m, k). Streams blocks in groups (Fig. 5 decomposition):
+        each group contributes a partial product; only one group's blocks
+        are promoted at a time."""
+        m, k = small.shape
+        assert m == self.ncols, (m, self.ncols)
+        acc = jnp.zeros((self.n, k), jnp.float32)
+        off = 0
+        for g0 in range(0, self.nblocks, self.group_size):
+            for i in range(g0, min(g0 + self.group_size, self.nblocks)):
+                b = self._blocks[i]
+                rows = small[off:off + b.ncols, :]
+                eff_alpha = alpha * b.scale
+                acc = kops.tsgemm(self.store.get(b.name), rows,
+                                  alpha=eff_alpha, beta=1.0, c0=acc,
+                                  impl=self.impl)
+                off += b.ncols
+        if c0 is not None and beta != 0.0:
+            acc = acc + beta * c0
+        return acc
+
+    def mv_trans_mv(self, other: jnp.ndarray, *, alpha: float = 1.0
+                    ) -> jnp.ndarray:
+        """MvTransMv: alpha * selfᵀ @ other → (m, k) small matrix.
+        Per-block Gram products streamed in groups; the right operand is
+        shared across groups (§3.4.3 shared-I/O optimization — it is read
+        once because it stays in the device tier)."""
+        parts = []
+        for i, b in enumerate(self._blocks):
+            g = kops.gram(self.store.get(b.name), other,
+                          alpha=alpha * b.scale, impl=self.impl)
+            parts.append(g)
+        return jnp.concatenate(parts, axis=0)
+
+    def mv_add_mv(self, alpha: float, other: "MultiVector", beta: float
+                  ) -> "MultiVector":
+        """MvAddMv: C <- alpha*A + beta*B (blockwise, same block structure)."""
+        assert self.block_widths() == other.block_widths()
+        out = MultiVector(self.store, self.n, group_size=self.group_size,
+                          impl=self.impl)
+        for i in range(self.nblocks):
+            out.append_block(alpha * self.block(i) + beta * other.block(i),
+                             pin_recent=False)
+        return out
+
+    def mv_dot(self, other: "MultiVector") -> jnp.ndarray:
+        """MvDot: columnwise dot products vec[i] = selfᵀ[:,i] · other[:,i]."""
+        assert self.block_widths() == other.block_widths()
+        outs = []
+        for i in range(self.nblocks):
+            outs.append(jnp.sum(self.block(i) * other.block(i), axis=0))
+        return jnp.concatenate(outs)
+
+    def mv_norm(self) -> jnp.ndarray:
+        """MvNorm: column 2-norms."""
+        outs = []
+        for i in range(self.nblocks):
+            outs.append(jnp.sqrt(jnp.sum(self.block(i) ** 2, axis=0)))
+        return jnp.concatenate(outs)
+
+    def clone_view(self, idxs: Sequence[int]) -> jnp.ndarray:
+        """CloneView: gather a set of columns (materialized)."""
+        cols = []
+        off = 0
+        want = set(int(i) for i in idxs)
+        for i, b in enumerate(self._blocks):
+            local = [j for j in range(b.ncols) if off + j in want]
+            if local:
+                cols.append(self.block(i)[:, local])
+            off += b.ncols
+        return jnp.concatenate(cols, axis=1)
+
+    def conv_layout(self) -> jnp.ndarray:
+        """ConvLayout: column-major subspace block → row-major operand for
+        SpMM. On TPU this is a logical no-op (XLA layouts); kept for API
+        fidelity. Returns the most recent block materialized."""
+        return self.block(self.nblocks - 1)
+
+    # ------------------------------------------------------------ restart ops
+    def compress(self, q: jnp.ndarray, new_widths: Sequence[int]
+                 ) -> "MultiVector":
+        """V_new = V @ Q for restart compression (Krylov–Schur). Q is
+        (m, m_new); output blocks of widths new_widths. This is the big
+        out-of-core GEMM of the restart step — each output block is one
+        grouped mv_times_mat pass over the subspace."""
+        assert q.shape[0] == self.ncols
+        assert sum(new_widths) == q.shape[1]
+        out = MultiVector(self.store, self.n, group_size=self.group_size,
+                          impl=self.impl)
+        off = 0
+        for w in new_widths:
+            blk = self.mv_times_mat(q[:, off:off + w])
+            out.append_block(blk, pin_recent=False)
+            off += w
+        return out
+
+    def to_dense(self) -> jnp.ndarray:
+        return jnp.concatenate([self.block(i) for i in range(self.nblocks)],
+                               axis=1)

@@ -1,0 +1,127 @@
+"""LinearOperator — matrix-free "multiply a TAS block by A".
+
+Three first-class implementations (DESIGN.md §4):
+
+  GraphOperator   block-sparse graph adjacency/Laplacian (the paper's case);
+                  streams the matrix image and accounts the bytes as SSD
+                  reads in the TieredStore (semi-external-memory SpMM).
+  NormalOperator  AᵀA for SVD of directed graphs (page graph, §4.3.2).
+  HvpOperator     Hessian-vector products of a model loss — the beyond-paper
+                  integration that points the eigensolver at the LM substrate
+                  (loss-curvature spectra).
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.tiles import TiledMatrix
+from repro.core.tiered import TieredStore
+from repro.kernels import ops as kops
+
+
+class LinearOperator(Protocol):
+    n: int  # problem size (rows of padded operand)
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Y = A @ X for a TAS block X (n, b)."""
+        ...
+
+
+class GraphOperator:
+    """Semi-external-memory SpMM operator over a TiledMatrix image.
+
+    The matrix image lives on the slow tier; every matmat streams it once
+    (sequential read — the paper's §3.3.3 pattern) and the TieredStore
+    read counter advances by the image size. The dense operand X is the
+    in-memory/fast-tier side of the semi-external split.
+    """
+
+    def __init__(self, tm: TiledMatrix, *, store: TieredStore | None = None,
+                 impl: kops.Impl = "auto", symmetric: bool = True):
+        self.tm = tm
+        self.n = tm.shape[0]
+        self.store = store
+        self.impl = impl
+        self.symmetric = symmetric
+        self._blocks = jnp.asarray(tm.blocks)
+        self._block_cols = jnp.asarray(tm.block_cols)
+        self._block_rows = jnp.asarray(
+            kops.block_rows_from_ptr(np.asarray(tm.row_ptr)))
+        self._row_mask = jnp.asarray(
+            kops.empty_row_mask(np.asarray(tm.row_ptr), tm.block_shape[0]))
+        self._coo = (jnp.asarray(tm.coo_rows), jnp.asarray(tm.coo_cols),
+                     jnp.asarray(tm.coo_vals))
+        self._image_bytes = tm.nbytes_image()
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.store is not None:  # account the streamed image read
+            self.store.stats.host_bytes_read += self._image_bytes
+            self.store.stats.host_reads += 1
+        y = kops.spmm_blocks(self._blocks, self._block_cols, self._block_rows,
+                             self._row_mask, x,
+                             n_block_rows=self.tm.n_block_rows, impl=self.impl)
+        rows, cols, vals = self._coo
+        if vals.shape[0]:
+            from repro.kernels.spmm_ref import coo_spmm_ref
+            y = y + coo_spmm_ref(rows, cols, vals, x, self.n)
+        return y
+
+
+class NormalOperator:
+    """AᵀA (or AAᵀ) for SVD on directed graphs. Requires the transpose
+    image (packed once, offline — the paper builds both images too)."""
+
+    def __init__(self, a_op: GraphOperator, at_op: GraphOperator):
+        self.a = a_op
+        self.at = at_op
+        self.n = at_op.n
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.at.matmat(self.a.matmat(x))
+
+
+class DenseOperator:
+    """Small dense test operator (oracle in tests)."""
+
+    def __init__(self, a: jnp.ndarray):
+        self.a = jnp.asarray(a, jnp.float32)
+        self.n = a.shape[0]
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.a @ x
+
+
+class HvpOperator:
+    """Matrix-free Hessian(-GGN)-vector product of `loss_fn(params)`.
+
+    Flattens params to a single vector space of size n (padded to pad_to).
+    Each column of the TAS block is one HVP — jitted and vmapped.
+    """
+
+    def __init__(self, loss_fn: Callable, params, *, pad_to: int = 8):
+        self.loss_fn = loss_fn
+        flat, self._unravel = jax.flatten_util.ravel_pytree(params)
+        self._params_flat = flat
+        self.n_logical = flat.shape[0]
+        self.n = -(-self.n_logical // pad_to) * pad_to
+
+        def hvp_single(v_flat):
+            def grad_flat(p_flat):
+                g = jax.grad(self.loss_fn)(self._unravel(p_flat))
+                return jax.flatten_util.ravel_pytree(g)[0]
+            _, hv = jax.jvp(grad_flat, (self._params_flat,), (v_flat,))
+            return hv
+
+        self._hvp = jax.jit(jax.vmap(hvp_single, in_axes=1, out_axes=1))
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        v = x[:self.n_logical, :]
+        hv = self._hvp(v)
+        if self.n == self.n_logical:
+            return hv
+        return jnp.pad(hv, ((0, self.n - self.n_logical), (0, 0)))

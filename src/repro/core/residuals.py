@@ -1,0 +1,57 @@
+"""Ritz residuals and convergence tests (Algorithm 1, steps 3–4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sort_ritz(theta: jnp.ndarray, which: str) -> np.ndarray:
+    """Return index order putting the wanted Ritz values first.
+
+    LM: largest magnitude (spectral analysis default),
+    LA: largest algebraic, SA: smallest algebraic.
+    """
+    t = np.asarray(theta)
+    if which == "LM":
+        return np.argsort(-np.abs(t), kind="stable")
+    if which == "LA":
+        return np.argsort(-t, kind="stable")
+    if which == "SA":
+        return np.argsort(t, kind="stable")
+    raise ValueError(f"unknown which={which}")
+
+
+def ritz_residual_bounds(s_coupling: jnp.ndarray, y: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Cheap residual norms from the Krylov relation A V = V H + Q S eᵀ:
+    ‖A x_i − θ_i x_i‖ = ‖S y_i[last-block rows]‖ — no I/O needed.
+
+    s_coupling: (b, m) coupling (nonzero only in trailing columns pre-restart)
+    y:          (m, k) Ritz eigenvectors of H.
+    """
+    return jnp.linalg.norm(s_coupling @ y, axis=0)
+
+
+@dataclasses.dataclass
+class EigResult:
+    eigenvalues: np.ndarray        # (nev,)
+    eigenvectors: np.ndarray | None  # (n, nev) or None if not materialized
+    residuals: np.ndarray          # (nev,) cheap bounds at convergence
+    n_restarts: int
+    n_ops: int                     # number of operator block applications
+    m_subspace: int
+    converged: bool
+    io_stats: dict | None = None
+
+
+def true_residuals(op, x: jnp.ndarray, theta: Sequence[float]) -> np.ndarray:
+    """‖A x_i − θ_i x_i‖₂ / max(1,|θ_i|) — the expensive exact check used by
+    tests and benchmarks (one extra operator pass)."""
+    ax = op.matmat(x)
+    th = jnp.asarray(theta, jnp.float32)
+    r = ax - x * th[None, :]
+    return np.asarray(jnp.linalg.norm(r, axis=0)
+                      / jnp.maximum(1.0, jnp.abs(th)))

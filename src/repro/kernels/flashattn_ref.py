@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention: plain softmax attention, one head.
+
+q (Sq, d), k/v (Sk, d) → (Sq, d); causal masks by absolute position with
+q_offset (q block's global start) so chunked callers agree with the kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, q_offset: int = 0,
+                  sm_scale: float | None = None) -> jnp.ndarray:
+    d = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    s = (q @ k.T) * scale
+    if causal:
+        qi = jnp.arange(q.shape[0])[:, None] + q_offset
+        ki = jnp.arange(k.shape[0])[None, :]
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v

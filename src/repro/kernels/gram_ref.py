@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the Gram / projection op (Anasazi MvTransMv):
+
+    G <- alpha * A^T @ B
+
+A: (n, m) TAS, B: (n, b) TAS → G: (m, b) small (fits in fast memory).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(a: jnp.ndarray, b: jnp.ndarray, *, alpha: float = 1.0) -> jnp.ndarray:
+    return alpha * jnp.dot(a.T, b, preferred_element_type=jnp.float32)

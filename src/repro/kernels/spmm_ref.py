@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for block-sparse SpMM: Y = A @ X (+ beta*Y0).
+
+A is a TiledMatrix-style block-sparse image. The oracle mirrors the kernel's
+math exactly (block gather → dense dot → scatter-add) in plain jnp so it runs
+anywhere and serves as the allclose reference for the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def spmm_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+             block_rows: jnp.ndarray, n_block_rows: int,
+             x: jnp.ndarray, *, beta: float = 0.0,
+             y0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Block-sparse SpMM oracle.
+
+    blocks:     (nb, bm, bn)
+    block_cols: (nb,) int32  — block-column per block
+    block_rows: (nb,) int32  — block-row per block (flattened CSR)
+    x:          (n_cols_padded, k)
+    returns     (n_block_rows*bm, k)
+    """
+    nb, bm, bn = blocks.shape
+    k = x.shape[1]
+    xb = x.reshape(-1, bn, k)                      # (n_block_cols, bn, k)
+    gathered = xb[block_cols]                      # (nb, bn, k)
+    partial = jnp.einsum("bij,bjk->bik", blocks, gathered,
+                         preferred_element_type=jnp.float32)  # (nb, bm, k)
+    out = jnp.zeros((n_block_rows, bm, k), dtype=jnp.float32)
+    out = out.at[block_rows].add(partial)
+    y = out.reshape(n_block_rows * bm, k)
+    if y0 is not None:
+        y = y + beta * y0.astype(jnp.float32)
+    return y
+
+
+def coo_spmm_ref(coo_rows: jnp.ndarray, coo_cols: jnp.ndarray,
+                 coo_vals: jnp.ndarray, x: jnp.ndarray,
+                 n_rows: int) -> jnp.ndarray:
+    """COO side-path oracle (single-entry-row remainder): segment-sum."""
+    contrib = coo_vals[:, None] * x[coo_cols]      # (nnz, k)
+    out = jnp.zeros((n_rows, x.shape[1]), dtype=jnp.float32)
+    return out.at[coo_rows].add(contrib)
+
+
+def spmm_dense_ref(a_dense: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """End-to-end dense oracle for whole-matrix comparisons."""
+    return jnp.dot(a_dense, x, preferred_element_type=jnp.float32)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the tall-skinny GEMM (Anasazi MvTimesMatAddMv):
+
+    C <- alpha * A @ B + beta * C0
+
+A: (n, m) tall-and-skinny, B: (m, b) small, C: (n, b).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tsgemm_ref(a: jnp.ndarray, b: jnp.ndarray, *, alpha: float = 1.0,
+               beta: float = 0.0, c0: jnp.ndarray | None = None) -> jnp.ndarray:
+    out = alpha * jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if c0 is not None and beta != 0.0:
+        out = out + beta * c0.astype(jnp.float32)
+    return out

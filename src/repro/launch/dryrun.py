@@ -1,0 +1,419 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("DRYRUN_XLA_EXTRA", ""))
+
+# ^ MUST precede any jax-importing import: jax locks the device count at
+# first init. The 512 placeholder host devices exist ONLY for this dry-run
+# entry point (16×16 single pod / 2×16×16 multi-pod production meshes).
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against the production mesh and record memory/cost/collective
+analysis for §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --arch flasheigen --graph page
+
+Results append to a JSONL cache; existing (arch, shape, mesh) cells are
+skipped, so the sweep is restartable (fault-tolerant by the same discipline
+we preach).
+"""
+import argparse
+import functools
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as shd
+from repro.models import steps as S
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.utils.hlo_analysis import collective_bytes
+
+# TPU v5e per-chip constants (DESIGN.md §8)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+
+# ---------------------------------------------------------------- helpers
+def n_row_devices(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a != "model"]))
+
+
+def microbatch_policy(cfg, shape, mesh) -> int:
+    """Smallest microbatch count whose activation + logits footprint fits a
+    ~6 GB per-device budget (v5e leaves ~9 GB after params+opt)."""
+    rows = n_row_devices(mesh)
+    if shape.global_batch % rows:
+        return 1
+    b_loc = shape.global_batch // rows
+    budget = 6e9
+    s, d, v, l = shape.seq_len, cfg.d_model, cfg.vocab_size, cfg.n_layers
+    for mb in [m for m in (1, 2, 4, 8, 16, 32) if b_loc % m == 0]:
+        per = b_loc // mb
+        act = l * per * s * d * 2          # saved layer inputs (bf16)
+        logits = per * s * v * 4           # f32 CE materialization
+        if act + logits <= budget:
+            return mb
+    return b_loc
+
+
+# §Perf hillclimb variants (EXPERIMENTS.md §Perf): baseline = all off.
+VARIANTS = {
+    "opt-decode": {"moe_decode_regroup": True, "shard_cache_seq": True},
+    "opt-prefill": {"prefill_last_only": True,
+                    "bf16_residual": True},
+    "opt-cache-seq": {"shard_cache_seq": True},
+    "opt-moe-regroup": {"moe_decode_regroup": True},
+    "opt-eigen": {"compressed": True},          # flasheigen cells only
+    # inference params need no ZeRO/FSDP spreading: model-shard only, so no
+    # per-layer weight all-gathers (pay ~11 GB/dev resident for 90B bf16)
+    "opt-prefill-nofsdp": {"prefill_last_only": True, "bf16_residual": True,
+                           "use_fsdp": False},
+}
+
+
+def _cfg_with(arch: str, variant: str | None):
+    import dataclasses as dc
+    cfg = configs.get(arch)
+    if variant:
+        ov = {k: v for k, v in VARIANTS[variant].items()
+              if k != "compressed"}
+        cfg = dc.replace(cfg, **ov)
+    return cfg
+
+
+def lm_cell(arch: str, shape_name: str, mesh, variant: str | None = None):
+    """Build (jitted_fn, arg_specs) for one LM cell."""
+    cfg = _cfg_with(arch, variant)
+    shape = SHAPES[shape_name]
+    rows = n_row_devices(mesh)
+
+    params_opt = jax.eval_shape(
+        functools.partial(S.init_all, jax.random.PRNGKey(0), cfg))
+    params_sds, opt_sds = params_opt
+    pspec = shd.param_specs(params_sds, cfg, mesh)
+    pshard = shd.to_named(pspec, mesh)
+
+    def opt_shard_leaf(spec, leaf):
+        return NamedSharding(mesh, adamw.shard_opt_spec(spec, leaf.shape,
+                                                        mesh))
+    oshard = adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=jax.tree_util.tree_map(opt_shard_leaf, pspec, params_sds,
+                                 is_leaf=lambda x: isinstance(x, P)),
+        v=jax.tree_util.tree_map(opt_shard_leaf, pspec, params_sds,
+                                 is_leaf=lambda x: isinstance(x, P)))
+
+    if shape.kind == "train":
+        mb = microbatch_policy(cfg, shape, mesh)
+        batch_sds = S.make_batch_specs(cfg, shape.global_batch,
+                                       shape.seq_len)
+        bshard = shd.to_named(
+            shd.batch_specs(batch_sds, mesh, shape.global_batch), mesh)
+        fn = S.build_train_step(cfg, num_microbatches=mb)
+        jitted = jax.jit(fn, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None))
+        return jitted, (params_sds, opt_sds, batch_sds), {"microbatches": mb}
+
+    if shape.kind == "prefill":
+        batch_sds = S.make_batch_specs(cfg, shape.global_batch,
+                                       shape.seq_len)
+        batch_sds.pop("targets")
+        bshard = shd.to_named(
+            shd.batch_specs(batch_sds, mesh, shape.global_batch), mesh)
+        fn = S.build_prefill_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+        return jitted, (params_sds, batch_sds), {}
+
+    # decode: one new token against a seq_len-deep cache
+    cache_len = shape.seq_len
+    cache_sds = jax.eval_shape(
+        functools.partial(tf.init_cache, cfg, shape.global_batch,
+                          cache_len))
+    cshard = shd.to_named(
+        shd.cache_specs(cache_sds, cfg, mesh, shape.global_batch,
+                        shard_seq=cfg.shard_cache_seq), mesh)
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    rows_ax = tuple(a for a in mesh.axis_names if a != "model")
+    tok_spec = (P(rows_ax, None) if shape.global_batch % rows == 0
+                else P(None, None))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = S.build_decode_step(cfg)
+    jitted = jax.jit(fn, in_shardings=(pshard, cshard,
+                                       NamedSharding(mesh, tok_spec),
+                                       NamedSharding(mesh, P())),
+                     out_shardings=(None, cshard))
+    return jitted, (params_sds, cache_sds, tok_sds, pos_sds), {}
+
+
+def eigen_cell(graph_name: str, mesh, variant: str | None = None):
+    """The paper's own cells: one fused Krylov expansion at graph scale."""
+    from repro.dist.dspmm import (CHUNK, build_eigen_step,
+                                  build_eigen_step_compressed, edge_spec,
+                                  vector_spec)
+    from repro.dist.layout import padded_n
+
+    g = configs.GRAPHS[graph_name]
+    r_groups = n_row_devices(mesh)
+    m_groups = mesh.shape["model"]
+    n_pad = padded_n(g.n_vertices, r_groups, m_groups)
+    n_dev = r_groups * m_groups
+    e_loc = -(-g.n_edges // n_dev)
+    b = g.block_size
+    nb_v = g.num_blocks - 1
+
+    espec = NamedSharding(mesh, edge_spec(mesh))
+    vspec = NamedSharding(mesh, vector_spec(mesh))
+    vstack = NamedSharding(mesh, P(None, tuple(mesh.axis_names), None))
+    compressed = variant and VARIANTS[variant].get("compressed")
+    if compressed:
+        fn, n_chunks, e_pad = build_eigen_step_compressed(
+            mesh, n_pad=n_pad, e_loc=e_loc, b=b, nb_v=nb_v)
+        packed = jax.ShapeDtypeStruct((r_groups, m_groups, e_pad),
+                                      jnp.uint32)
+        bases = jax.ShapeDtypeStruct((r_groups, m_groups, n_chunks * 2),
+                                     jnp.int32)
+        vals = jax.ShapeDtypeStruct((r_groups, m_groups, e_pad),
+                                    jnp.bfloat16)
+        v = jax.ShapeDtypeStruct((nb_v, n_pad, b), jnp.bfloat16)
+        x = jax.ShapeDtypeStruct((n_pad, b), jnp.bfloat16)
+        jitted = jax.jit(fn, in_shardings=(espec, espec, espec, vstack,
+                                           vspec))
+        meta = {"n_pad": n_pad, "e_loc": e_loc, "b": b, "nb_v": nb_v,
+                "bytes_per_edge": 6}
+        return jitted, (packed, bases, vals, v, x), meta
+
+    fn = build_eigen_step(mesh, n_pad=n_pad, e_loc=e_loc, b=b, nb_v=nb_v)
+    cols = jax.ShapeDtypeStruct((r_groups, m_groups, e_loc), jnp.int32)
+    rws = jax.ShapeDtypeStruct((r_groups, m_groups, e_loc), jnp.int32)
+    vals = jax.ShapeDtypeStruct((r_groups, m_groups, e_loc), jnp.float32)
+    v = jax.ShapeDtypeStruct((nb_v, n_pad, b), jnp.float32)
+    x = jax.ShapeDtypeStruct((n_pad, b), jnp.float32)
+    jitted = jax.jit(fn, in_shardings=(espec, espec, espec, vstack, vspec))
+    meta = {"n_pad": n_pad, "e_loc": e_loc, "b": b, "nb_v": nb_v,
+            "bytes_per_edge": 12}
+    return jitted, (cols, rws, vals, v, x), meta
+
+
+def model_flops_of(arch: str, shape_name: str) -> float:
+    if arch == "flasheigen":
+        g = configs.GRAPHS[shape_name]
+        m = g.subspace
+        # SpMM + two CGS passes (gram + update) + CholQR² per expansion
+        return (2.0 * g.n_edges * g.block_size
+                + 8.0 * g.n_vertices * m * g.block_size
+                + 8.0 * g.n_vertices * g.block_size * g.block_size)
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch        # decode: 1 token/seq
+
+
+# ------------------------------------------------- accounting lowering
+def accounting_cost(arch: str, shape_name: str,
+                    variant: str | None = None) -> dict:
+    """Exact per-step FLOP/byte totals: 1-device lowering with scans fully
+    unrolled (HloCostAnalysis counts a while body once — unrolling makes the
+    counts exact, including remat recompute). Uses unoptimized-HLO cost
+    analysis (lowered.cost_analysis), so no 1-device compile of a 123B graph
+    is needed; bytes are therefore an upper bound (pre-fusion)."""
+    import dataclasses as dc
+    if arch == "flasheigen":
+        g = configs.GRAPHS[shape_name]
+        # closed-form (no scans in the eigen step): one SpMM + CGS2 + CholQR²
+        n, m, b = g.n_vertices, g.subspace, g.block_size
+        e = g.n_edges
+        compressed = bool(variant and VARIANTS[variant].get("compressed"))
+        flops = 2.0 * e * b + 8.0 * n * (m - b) * b + 8.0 * n * b * b
+        edge_b = 6 if compressed else 12         # uint16-packed+bf16 vs raw
+        panel_b = 2 * b if compressed else 4 * b  # bf16 vs f32 X gather
+        v_b = 2 if compressed else 4              # bf16 vs f32 subspace
+        bytes_ = (e * (edge_b + panel_b + 4 * b)  # stream + gather + scatter
+                  + 4.0 * v_b * n * (m - b)       # 4 reads of V (CGS2)
+                  + 40.0 * n * b)                 # w/x round trips
+        return {"flops_total": flops, "bytes_total": bytes_}
+    cfg = _cfg_with(arch, variant)
+    shape = SHAPES[shape_name]
+    cfg = dc.replace(cfg, scan_unroll=1 << 30)  # every scan fully unrolled
+    if shape.kind == "train":
+        fn = S.build_train_step(cfg, num_microbatches=1)
+        params_sds, opt_sds = jax.eval_shape(
+            functools.partial(S.init_all, jax.random.PRNGKey(0), cfg))
+        batch_sds = S.make_batch_specs(cfg, shape.global_batch,
+                                       shape.seq_len)
+        lowered = jax.jit(fn).lower(params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        fn = S.build_prefill_step(cfg)
+        params_sds, _ = jax.eval_shape(
+            functools.partial(S.init_all, jax.random.PRNGKey(0), cfg))
+        batch_sds = S.make_batch_specs(cfg, shape.global_batch,
+                                       shape.seq_len)
+        batch_sds.pop("targets")
+        lowered = jax.jit(fn).lower(params_sds, batch_sds)
+    else:
+        fn = S.build_decode_step(cfg)
+        params_sds, _ = jax.eval_shape(
+            functools.partial(S.init_all, jax.random.PRNGKey(0), cfg))
+        cache_sds = jax.eval_shape(
+            functools.partial(tf.init_cache, cfg, shape.global_batch,
+                              shape.seq_len))
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(fn).lower(params_sds, cache_sds, tok, pos)
+    ca = lowered.cost_analysis() or {}
+    return {"flops_total": float(ca.get("flops", 0.0)),
+            "bytes_total": float(ca.get("bytes accessed", 0.0))}
+
+
+# ---------------------------------------------------------------- analyze
+def analyze(jitted, arg_specs, mesh, model_flops: float,
+            acct: dict) -> dict:
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    lowered = jitted.lower(*arg_specs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # compiled (production-mesh) analysis: resident memory + collectives.
+    # FLOP/byte totals come from the accounting lowering (acct) because
+    # HloCostAnalysis counts while-loop (scan) bodies once.
+    ma = compiled.memory_analysis()
+    mem = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes"):
+        mem[f] = int(getattr(ma, f, 0))
+    coll = collective_bytes(compiled.as_text(), n_dev)
+
+    hlo_total = acct["flops_total"]
+    flops_dev = hlo_total / n_dev
+    bytes_dev = acct["bytes_total"] / n_dev
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll.get("total", 0.0) / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "hlo_flops_total": hlo_total,
+        "memory": mem,
+        "per_device_bytes_resident": mem["argument_size_in_bytes"]
+        + mem["temp_size_in_bytes"],
+        "collective_per_device": coll,
+        "model_flops": model_flops,
+        "useful_ratio": (model_flops / hlo_total) if hlo_total else 0.0,
+        **{k: v for k, v in terms.items()},
+        "dominant": dominant,
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (model_flops / (n_dev * PEAK_FLOPS))
+        / max(max(terms.values()), 1e-30),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str | None = None) -> dict:
+    acct = accounting_cost(arch, shape_name, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        if arch == "flasheigen":
+            jitted, specs, meta = eigen_cell(shape_name, mesh, variant)
+        else:
+            jitted, specs, meta = lm_cell(arch, shape_name, mesh, variant)
+        rec = analyze(jitted, specs, mesh,
+                      model_flops_of(arch, shape_name), acct)
+    rec.update({"arch": arch, "shape": shape_name,
+                "variant": variant or "baseline",
+                "xla_extra": os.environ.get("DRYRUN_XLA_EXTRA", ""),
+                "mesh": "2x16x16" if multi_pod else "16x16", **meta})
+    return rec
+
+
+def all_cells(include_eigen: bool = True):
+    cells = []
+    for arch, cfg in configs.ARCHS.items():
+        for shape_name, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            if ok:
+                cells.append((arch, shape_name))
+    if include_eigen:
+        for gname in configs.GRAPHS:
+            cells.append(("flasheigen", gname))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--graph")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS))
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("variant", "baseline")))
+                except json.JSONDecodeError:
+                    pass
+
+    if args.all:
+        cells = all_cells()
+    elif args.arch == "flasheigen":
+        cells = [("flasheigen", args.graph or "twitter")]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    vname = args.variant or "baseline"
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (arch, shape, mesh_name, vname) in done:
+                print(f"skip {arch} {shape} {mesh_name} {vname} (cached)")
+                continue
+            print(f"=== {arch} {shape} {mesh_name} {vname}", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp, args.variant)
+                print(json.dumps({k: rec[k] for k in
+                                  ("compile_s", "dominant",
+                                   "roofline_fraction", "useful_ratio")},
+                                 default=str), flush=True)
+            except Exception as e:  # record failures — they are bugs
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "variant": vname,
+                       "error": f"{type(e).__name__}: {e}"}
+                print("FAILED:", rec["error"], flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec, default=float) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required for the dry-run's forced 512-device
+host platform to initialize first.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Small mesh over whatever devices exist (tests / CPU)."""
+    import numpy as np
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if multi_pod:
+        assert n % 2 == 0
+        return jax.make_mesh((2, 1, n // 2), ("pod", "data", "model"),
+                             devices=devs[:n])
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"), devices=devs[:1])
+    d = int(np.floor(np.sqrt(n)))
+    while n % d:
+        d -= 1
+    return jax.make_mesh((d, n // d), ("data", "model"), devices=devs[:n])
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch / vector rows (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,55 @@
+"""Training launcher.
+
+  python -m repro.launch.train --arch qwen2-1.5b --reduced --steps 100
+  python -m repro.launch.train --arch yi-9b --reduced --steps 300 \
+      --ckpt-dir /tmp/ck --resume
+
+On a real pod this process runs per host (jax.distributed.initialize) with
+the production mesh; on CPU it uses the debug mesh. Checkpoint/restart,
+preemption handling and the deterministic pipeline come from
+train.trainer.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_debug_mesh
+from repro.train.trainer import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the arch family")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    if cfg.frontend is not None:
+        raise SystemExit("frontend archs need the example drivers "
+                         "(precomputed embeddings)")
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, peak_lr=args.lr,
+                       num_microbatches=args.microbatches, seed=args.seed)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch, seed=args.seed)
+    mesh = make_debug_mesh() if len(jax.devices()) > 1 else None
+    summary = train(cfg, tcfg, dcfg, mesh=mesh)
+    print("summary:", summary)
+
+
+if __name__ == "__main__":
+    main()

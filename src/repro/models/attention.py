@@ -1,0 +1,162 @@
+"""Attention: GQA / MQA / sliding-window / cross, with q-chunked
+online-softmax for long prefills and ring-buffer KV caches for decode.
+
+Memory discipline mirrors the paper's streaming philosophy: for long
+sequences the query dimension is scanned in chunks so the score matrix
+never materializes beyond (chunk × S) — prefill_32k at 90B scale stays
+within HBM without flash-attention hardware tricks (a Pallas flash kernel
+is a later hillclimb option; the chunked scan is the portable baseline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import (init_linear, apply_linear, apply_rope,
+                                  rope_freqs, dtype_of)
+
+NEG_INF = -1e30
+Q_CHUNK = 1024          # q-chunk scan kicks in above this seq length
+
+
+def init_attn(key, cfg, *, cross: bool = False):
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, cfg, cfg.d_model, cfg.n_heads * hd,
+                          bias=cfg.qkv_bias),
+        "wk": init_linear(k2, cfg, cfg.d_model, cfg.n_kv_heads * hd,
+                          bias=cfg.qkv_bias),
+        "wv": init_linear(k3, cfg, cfg.d_model, cfg.n_kv_heads * hd,
+                          bias=cfg.qkv_bias),
+        "wo": init_linear(k4, cfg, cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def _split_heads(cfg, q, k, v):
+    b, sq = q.shape[:2]
+    sk = k.shape[1]
+    hd, kh = cfg.hd, cfg.n_kv_heads
+    g = cfg.n_heads // kh
+    q = q.reshape(b, sq, kh, g, hd)
+    k = k.reshape(b, sk, kh, hd)
+    v = v.reshape(b, sk, kh, hd)
+    return q, k, v
+
+
+def _attend(q, k, v, mask):
+    """q (B,Sq,K,G,hd), k/v (B,Sk,K,hd), mask (Sq,Sk) or (B,1,1,Sq,Sk)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if mask is not None:
+        scores = scores + mask
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+
+
+def _mask(kind: str, sq: int, sk: int, *, q_offset: int = 0,
+          window: int = 0) -> jnp.ndarray | None:
+    if kind == "none":
+        return None
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    m = qi >= ki
+    if kind == "swa":
+        m = m & (qi - ki < window)
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attn_forward(cfg, p, x, positions, *, kind: str = "causal",
+                 encoder: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). kind: causal|swa|cross|none."""
+    b, s, _ = x.shape
+    src = encoder if kind == "cross" else x
+    q = apply_linear(p["wq"], x)
+    k = apply_linear(p["wk"], src)
+    v = apply_linear(p["wv"], src)
+    q, k, v = _split_heads(cfg, q, k, v)
+    if kind != "cross":
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    sk = k.shape[1]
+    mkind = {"causal": "causal", "swa": "swa",
+             "cross": "none", "none": "none"}[kind]
+
+    if s <= Q_CHUNK:
+        out = _attend(q, k, v, _mask(mkind, s, sk, window=cfg.window))
+    else:
+        assert s % Q_CHUNK == 0
+        nchunks = s // Q_CHUNK
+
+        def body(_, qc_i):
+            qc, i = qc_i
+            m = _mask(mkind, Q_CHUNK, sk, q_offset=i * Q_CHUNK,
+                      window=cfg.window)
+            return None, _attend(qc, k, v, m)
+
+        qs = q.reshape(b, nchunks, Q_CHUNK, *q.shape[2:]).swapaxes(0, 1)
+        # scan_unroll: the dry-run accounting lowers with full unroll so
+        # HloCostAnalysis sees every chunk (a while body is counted once)
+        _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nchunks)),
+                               unroll=min(cfg.scan_unroll, nchunks))
+        out = outs.swapaxes(0, 1).reshape(b, s, *q.shape[2:])
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    return apply_linear(p["wo"], out)
+
+
+# ---------------------------------------------------------------- decode
+def init_kv_cache(cfg, batch: int, length: int, dtype) -> dict:
+    """Ring-buffer KV cache. For SWA/local archs `length` is min(S, window)
+    — long-context decode stores only the window (the sub-quadratic win)."""
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, length, kh, hd), dtype),
+        "v": jnp.zeros((batch, length, kh, hd), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),   # absolute pos per slot
+    }
+
+
+def attn_decode(cfg, p, x, cache, pos, *, kind: str = "causal",
+                encoder_kv: tuple | None = None):
+    """One-token decode. x (B,1,D); pos scalar int32. Returns (out, cache)."""
+    b = x.shape[0]
+    q = apply_linear(p["wq"], x)
+    if kind == "cross":
+        k, v = encoder_kv                      # precomputed at prefill
+        q, _, _ = _split_heads(cfg, q, k.reshape(b, k.shape[1], -1),
+                               v.reshape(b, v.shape[1], -1))
+        mask = None
+    else:
+        kn = apply_linear(p["wk"], x)
+        vn = apply_linear(p["wv"], x)
+        q, kn, vn = _split_heads(cfg, q, kn, vn)
+        cos, sin = rope_freqs(cfg, pos[None].astype(jnp.float32))
+        q = apply_rope(q, cos, sin)
+        kn = apply_rope(kn, cos, sin)
+        length = cache["k"].shape[1]
+        slot = pos % length                     # ring buffer
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kn, slot, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vn, slot, 1),
+            "pos": jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos[None], slot, 0),
+        }
+        k, v = cache["k"], cache["v"]
+        valid = (cache["pos"] >= 0) & (cache["pos"] <= pos)
+        if kind == "swa":
+            valid &= cache["pos"] > pos - cfg.window
+        mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    out = _attend(q, k, v, mask)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
+    return apply_linear(p["wo"], out), cache
+
+
+def precompute_cross_kv(cfg, p, encoder: jnp.ndarray):
+    k = apply_linear(p["wk"], encoder)
+    v = apply_linear(p["wv"], encoder)
+    b, sk = k.shape[:2]
+    return (k.reshape(b, sk, cfg.n_kv_heads, cfg.hd),
+            v.reshape(b, sk, cfg.n_kv_heads, cfg.hd))

@@ -1,0 +1,124 @@
+"""Elementary model components (pure functions, params as nested dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(cfg, d: int):
+    p = {"scale": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+def apply_norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- linear
+def init_linear(key, cfg, d_in: int, d_out: int, *, bias: bool = False):
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) / np.sqrt(d_in)
+    p = {"w": w.astype(dtype_of(cfg))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype_of(cfg))
+    return p
+
+
+def apply_linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def act_fn(cfg):
+    return jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+
+
+# ----------------------------------------------------------------- mlp
+def init_mlp(key, cfg, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_linear(k1, cfg, d, d_ff),
+         "down": init_linear(k2, cfg, d_ff, d)}
+    if cfg.glu:
+        p["gate"] = init_linear(k3, cfg, d, d_ff)
+    return p
+
+
+def apply_mlp(cfg, p, x):
+    h = apply_linear(p["up"], x)
+    if cfg.glu:
+        h = act_fn(cfg)(apply_linear(p["gate"], x)) * h
+    else:
+        h = act_fn(cfg)(h)
+    return apply_linear(p["down"], h)
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(cfg, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (…,) → (…, hd/2) cos/sin."""
+    hd = cfg.hd
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, hd, 2) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (B, S, …, hd); cos/sin: (S, hd/2) or (B, S, hd/2). Head dims
+    between S and hd broadcast."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    mid = (1,) * (x1.ndim - 3)
+    if cos.ndim == 2:                       # (S, hd/2)
+        shape = (1, cos.shape[0]) + mid + (cos.shape[-1],)
+    else:                                   # (B, S, hd/2)
+        shape = cos.shape[:2] + mid + (cos.shape[-1],)
+    cos, sin = cos.reshape(shape), sin.reshape(shape)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- embeds
+def init_embedding(key, cfg):
+    tok = jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                            jnp.float32) * 0.02
+    return {"tok": tok.astype(dtype_of(cfg))}
+
+
+def embed_tokens(p, tokens):
+    return p["tok"][tokens]
+
+
+def lm_logits(cfg, params, x):
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].T
+    else:
+        w = params["lm_head"]["w"]
+    return (x @ w).astype(jnp.float32)
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean CE over (B, S) targets; logits (B, S, V) f32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

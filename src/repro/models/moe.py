@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch
+(GShard/Switch style — one-hot dispatch/combine einsums, which is the
+shardable TPU form: the expert dimension maps onto the 'model' mesh axis
+when divisible — EP — else the expert hidden dim is tensor-sharded).
+
+Covers grok-1 (8e top-2, TP-within-expert) and arctic (128e top-2 + dense
+residual MLP, EP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import init_linear, apply_linear, init_mlp, \
+    apply_mlp, act_fn, dtype_of
+
+
+def init_moe(key, cfg):
+    e = cfg.n_experts
+    dff = cfg.moe_d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": init_linear(ks[0], cfg, d, e),
+        "up": (jax.random.normal(ks[1], (e, d, dff), jnp.float32)
+               * scale).astype(dtype_of(cfg)),
+        "down": (jax.random.normal(ks[2], (e, dff, d), jnp.float32)
+                 / np.sqrt(dff)).astype(dtype_of(cfg)),
+    }
+    if cfg.glu:
+        p["gate"] = (jax.random.normal(ks[3], (e, d, dff), jnp.float32)
+                     * scale).astype(dtype_of(cfg))
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[4], cfg, d, cfg.d_ff)
+    return p
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    cap = int(np.ceil(tokens_per_group * cfg.top_k / cfg.n_experts
+                      * cfg.capacity_factor))
+    return max(cap, 1)
+
+
+def moe_forward(cfg, p, x):
+    """x (B,S,D) → (B,S,D), GShard-style grouped dispatch.
+
+    Tokens are dispatched within *groups* (one group per batch row), so the
+    dispatch/combine einsum cost is g·s·E·cap·D with cap ∝ s/E — linear in
+    total tokens — instead of the quadratic global-capacity form. Groups
+    map onto the data-parallel mesh axes; experts onto 'model' (EP).
+    Per-group over-capacity tokens are dropped (standard).
+
+    decode regrouping (§Perf hillclimb): with S == 1 (decode), per-batch-row
+    groups would run ALL experts on 1-token inputs (cap=1 each) — E/top_k ×
+    wasted expert FLOPs. Regroup the whole batch into one group so the
+    expert GEMM only sees ≈ B·top_k/E tokens per expert."""
+    if getattr(cfg, "moe_decode_regroup", False) and x.shape[1] == 1:
+        b0 = x.shape[0]
+        out = moe_forward_grouped(cfg, p, x.reshape(1, b0, x.shape[2]))
+        return out.reshape(b0, 1, x.shape[2])
+    return moe_forward_grouped(cfg, p, x)
+
+
+def moe_forward_grouped(cfg, p, x):
+    g, s, d = x.shape
+    e = cfg.n_experts
+    cap = capacity(cfg, s)
+
+    logits = apply_linear(p["router"], x).astype(jnp.float32)    # (g,s,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)        # (g,s,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position of each (token, k) routing within its per-group expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)        # (g,s,k,E)
+    flatoh = onehot.reshape(g, s * cfg.top_k, e)
+    pos_in_e = jnp.cumsum(flatoh, axis=1) * flatoh - 1
+    pos = jnp.max(pos_in_e.reshape(g, s, cfg.top_k, e), axis=-1)  # (g,s,k)
+    keep = pos < cap
+
+    # over-capacity routings get pos=cap → one_hot yields the zero row
+    oh_e = onehot.astype(x.dtype)                                # (g,s,k,E)
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                          dtype=x.dtype)                         # (g,s,k,cap)
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)         # (g,s,E,cap)
+    gv_e = jnp.einsum("gsk,gske->gse",
+                      (gate_vals * keep).astype(jnp.float32),
+                      onehot.astype(jnp.float32)).astype(x.dtype)
+    combine = dispatch * gv_e[..., None]
+
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch, x)              # (g,E,cap,D)
+    h = jnp.einsum("gecd,edf->gecf", xin, p["up"])
+    if cfg.glu:
+        h = act_fn(cfg)(jnp.einsum("gecd,edf->gecf", xin, p["gate"])) * h
+    else:
+        h = act_fn(cfg)(h)
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["down"])           # (g,E,cap,D)
+    out = jnp.einsum("gsec,gecd->gsd", combine, out_e)
+
+    if cfg.dense_residual:
+        out = out + apply_mlp(cfg, p["dense"], x)
+    return out
+
+
+def aux_load_balance_loss(cfg, logits: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary (fraction·probability)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top1 = jnp.argmax(probs, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Gated linear recurrence h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t) with
+a_t = exp(−c·softplus(Λ)·r_t). Sequence form uses an associative scan
+(log-depth on TPU); decode is the O(1) per-token recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import init_linear, apply_linear, dtype_of
+
+_C = 8.0
+
+
+def _width(cfg):
+    return cfg.rglru_width or cfg.d_model
+
+
+def init_rglru(key, cfg):
+    d, rw = cfg.d_model, _width(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_x": init_linear(ks[0], cfg, d, rw),
+        "in_gate": init_linear(ks[1], cfg, d, rw),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, rw), jnp.float32)
+                   * 0.1).astype(dtype_of(cfg)),
+        "conv_b": jnp.zeros((rw,), dtype_of(cfg)),
+        "w_a": init_linear(ks[3], cfg, rw, rw),        # recurrence gate r_t
+        "w_i": init_linear(ks[4], cfg, rw, rw),        # input gate i_t
+        "lam": jnp.full((rw,), 3.0, jnp.float32),      # Λ (a ≈ 0.95^c init)
+        "out": init_linear(jax.random.fold_in(key, 9), cfg, rw, d),
+    }
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(apply_linear(p["w_a"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(p["w_i"], xb).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # log a_t ≤ 0
+    a = jnp.exp(log_a)
+    gated_x = i * xb.astype(jnp.float32)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, None)) * gated_x
+    return a, b
+
+
+def _conv1d(w, b, x, *, state=None):
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        return (sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b,
+                None)
+    buf = jnp.concatenate([state, x], axis=1)
+    return jnp.einsum("bkc,kc->bc", buf, w)[:, None] + b, buf[:, 1:]
+
+
+def rglru_forward(cfg, p, x, *, return_state: bool = False):
+    """x (B,L,D) → (B,L,D) via associative scan over the recurrence."""
+    xb = apply_linear(p["in_x"], x)
+    gate = jax.nn.gelu(apply_linear(p["in_gate"], x))
+    xb, _ = _conv1d(p["conv_w"], p["conv_b"], xb)
+    a, b = _gates(p, xb)                                  # (B,L,RW) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    out = apply_linear(p["out"], y)
+    if return_state:
+        return out, h[:, -1]
+    return out
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    rw = _width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, rw), dtype),
+        "h": jnp.zeros((batch, rw), jnp.float32),
+    }
+
+
+def rglru_decode(cfg, p, x, cache):
+    """x (B,1,D) → (y, cache) single-step."""
+    xb = apply_linear(p["in_x"], x)
+    gate = jax.nn.gelu(apply_linear(p["in_gate"], x))
+    xb, conv_state = _conv1d(p["conv_w"], p["conv_b"], xb,
+                             state=cache["conv"])
+    a, b = _gates(p, xb)                                  # (B,1,RW)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate)
+    return apply_linear(p["out"], y), {"conv": conv_state, "h": h}

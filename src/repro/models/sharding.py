@@ -1,0 +1,168 @@
+"""Logical-axis sharding rule engine with divisibility fallback.
+
+Maps parameter/activation/cache dimensions onto the fixed production mesh
+(('pod',) 'data', 'model'):
+
+  * batch-like dims shard over every non-'model' axis;
+  * width-like dims (q/kv projections, ffn, experts, vocab) shard over
+    'model' **iff divisible** — otherwise replicate (e.g. qwen2's 12 heads
+    on a 16-way axis: the flat 1536 q-dim shards; kv 256-dim replicates);
+  * with cfg.use_fsdp, the d_model ("embed") dim of big-arch params also
+    shards over 'data' (FSDP: GSPMD all-gathers weights per layer);
+  * optimizer moments get ZeRO-1 spreading (optim.adamw.shard_opt_spec).
+
+Specs are produced per-path from the params pytree, so new layer types only
+need a rule entry.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _rows(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _div(size: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    ax = axes if isinstance(axes, tuple) else (axes,)
+    total = int(np.prod([mesh.shape[a] for a in ax]))
+    return size % total == 0 and size >= total
+
+
+def _maybe(size: int, mesh: Mesh, axes):
+    return axes if _div(size, mesh, axes) else None
+
+
+# (path regex, [logical dim roles]) — roles consumed right-to-left so stacked
+# leading layer dims fall through to None.
+_PARAM_RULES: list[tuple[str, list[str]]] = [
+    (r"embed/tok$",               ["vocab", "embed"]),
+    (r"embed/in_proj/w$",         ["embed", "model_out"]),
+    (r"lm_head/w$",               ["embed", "vocab"]),
+    (r"attn/wq/w$",               ["embed", "model_out"]),
+    (r"attn/w[kv]/w$",            ["embed", "model_out"]),
+    (r"attn/wo/w$",               ["model_out", "embed"]),
+    (r"attn/w[qkv]/b$",           ["model_out"]),
+    (r"ffn/(up|gate)/w$",         ["embed", "model_out"]),
+    (r"ffn/down/w$",              ["model_out", "embed"]),
+    (r"ffn/router/w$",            ["embed", None]),
+    (r"ffn/(up|gate)$",           ["experts", "embed", "model_out"]),
+    (r"ffn/down$",                ["experts", "model_out", "embed"]),
+    (r"ffn/dense/(up|gate)/w$",   ["embed", "model_out"]),
+    (r"ffn/dense/down/w$",        ["model_out", "embed"]),
+    (r"ssm/in_proj/w$",           ["embed", None]),
+    (r"ssm/out_proj/w$",          ["model_out", "embed"]),
+    (r"rec/(in_x|in_gate|w_a|w_i)/w$", ["embed", "model_out"]),
+    (r"rec/out/w$",               ["model_out", "embed"]),
+]
+
+
+def _role_axis(role, size: int, cfg, mesh: Mesh):
+    if role is None:
+        return None
+    if role == "vocab" or role == "model_out" or role == "experts":
+        return _maybe(size, mesh, "model")
+    if role == "embed":
+        if cfg.use_fsdp:
+            return _maybe(size, mesh, "data")
+        return None
+    return None
+
+
+def param_specs(params: Any, cfg, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec mirroring params."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        used: set = set()
+        for pat, roles in _PARAM_RULES:
+            if re.search(pat, pstr):
+                # align roles to trailing dims (leading dims = layer stacking)
+                for i, role in enumerate(roles):
+                    dim = len(shape) - len(roles) + i
+                    if dim < 0:
+                        continue
+                    ax = _role_axis(role, shape[dim], cfg, mesh)
+                    # each mesh axis may appear once per spec: first role
+                    # wins (e.g. arctic: experts take 'model' → EP, the
+                    # within-expert ffn dim replicates; grok: 8 experts
+                    # don't divide 16 → ffn dim takes 'model' → TP)
+                    if ax is not None and ax in used:
+                        ax = None
+                    if ax is not None:
+                        used.add(ax)
+                    spec[dim] = ax
+                break
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch: Any, mesh: Mesh, global_batch: int) -> Any:
+    rows = _rows(mesh)
+    nrows = int(np.prod([mesh.shape[a] for a in rows]))
+    ax = rows if global_batch % nrows == 0 else None
+
+    def spec(leaf):
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_specs(cache: Any, cfg, mesh: Mesh, batch: int,
+                *, shard_seq: bool = False) -> Any:
+    """Decode caches: batch over row axes; kv-head/state dims over 'model'
+    when divisible. Stacked leading layer dim stays unsharded.
+
+    shard_seq=True (§Perf hillclimb): when the kv-head dim doesn't divide
+    the model axis (every GQA arch with kv<16), shard the cache *sequence*
+    dim over 'model' instead of replicating — attention over a seq-sharded
+    ring buffer is a partial-softmax psum, tiny vs gathering the cache."""
+    rows = _rows(mesh)
+    nrows = int(np.prod([mesh.shape[a] for a in rows]))
+    batch_ax = rows if batch % nrows == 0 else None
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        shape = leaf.shape
+        stacked = "stack" in pstr
+        off = 1 if stacked else 0
+        spec = [None] * len(shape)
+        name = pstr.rsplit("/", 1)[-1]
+        if name in ("k", "v", "ck", "cv"):        # (B, S, K, hd)
+            if len(shape) - off == 4:
+                spec[off] = batch_ax
+                spec[off + 2] = _maybe(shape[off + 2], mesh, "model")
+                if spec[off + 2] is None and shard_seq:
+                    spec[off + 1] = _maybe(shape[off + 1], mesh, "model")
+        elif name == "state":                      # ssm (B, H, P, N)
+            spec[off] = batch_ax
+            spec[off + 1] = _maybe(shape[off + 1], mesh, "model")
+        elif name == "conv":                       # (B, K-1, C)
+            spec[off] = batch_ax
+            spec[off + 2] = _maybe(shape[off + 2], mesh, "model")
+        elif name == "h":                          # rglru (B, RW)
+            spec[off] = batch_ax
+            spec[off + 1] = _maybe(shape[off + 1], mesh, "model")
+        elif name == "pos":
+            if shard_seq:
+                spec[off] = _maybe(shape[off], mesh, "model")
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  tree_specs,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,180 @@
+"""Mamba-2: state-space duality (SSD) layer [arXiv:2405.21060].
+
+Chunked dual form for train/prefill (quadratic inside ssm_chunk-sized
+chunks, linear recurrence across chunks) and the O(1)-state recurrent form
+for decode — which is what makes the long_500k cell tractable for this
+family (constant-size state instead of a 524288-token KV cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import init_linear, apply_linear, dtype_of
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg):
+    d, (d_in, h, p, n) = cfg.d_model, _dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_dim = d_in + 2 * n                      # conv over (x, B, C)
+    return {
+        # in_proj → [z, x, B, C, dt]
+        "in_proj": init_linear(ks[0], cfg, d, 2 * d_in + 2 * n + h),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype_of(cfg)),
+        "conv_b": jnp.zeros((conv_dim,), dtype_of(cfg)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": init_linear(ks[2], cfg, d_in, d),
+        "norm_scale": jnp.ones((d_in,), dtype_of(cfg)),
+    }
+
+
+def _segsum(x):
+    """(… T) → (… T T) masked segment sums: sum_{j<i..} (lower-tri)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(x, a_dt, b_mat, c_mat, chunk: int):
+    """SSD dual form.
+
+    x    (B, L, H, P)   inputs per head
+    a_dt (B, L, H)      log decay per step (dt * A, negative)
+    b/c  (B, L, N)      shared across heads (ngroups = 1)
+    returns y (B, L, H, P), final_state (B, H, P, N)
+    """
+    bsz, l_orig, h, p = x.shape
+    n = b_mat.shape[-1]
+    if l_orig % chunk:
+        # pad with identity steps: x=0 adds nothing, a_dt=0 → decay=1
+        # preserves the state, so y[:l] and final_state are exact.
+        padlen = chunk - l_orig % chunk
+        x = jnp.pad(x, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, padlen), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, padlen), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, padlen), (0, 0)))
+    l = x.shape[1]
+    c = l // chunk
+    xc = x.reshape(bsz, c, chunk, h, p)
+    ac = a_dt.reshape(bsz, c, chunk, h).transpose(0, 3, 1, 2)  # (B,H,C,L)
+    bc = b_mat.reshape(bsz, c, chunk, n)
+    cc = c_mat.reshape(bsz, c, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)
+    # 1. intra-chunk (quadratic, "attention-like")
+    l_mat = jnp.exp(_segsum(ac))                                # (B,H,C,L,L)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc, bc, l_mat, xc)
+    # 2. chunk states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)             # (B,H,C,L)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", bc, decay_states, xc)
+    # 3. inter-chunk recurrence
+    a_chunk = a_cum[..., -1]                                    # (B,H,C)
+    pad = jnp.pad(a_chunk, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(pad))                         # (B,H,C+1,C+1)
+    states0 = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states], axis=1)        # (B,C+1,H,P,N)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states0)
+    prev_states = new_states[:, :-1]                            # state entering chunk
+    final_state = new_states[:, -1]
+    # 4. state → output contribution
+    state_decay = jnp.exp(a_cum)                                # (B,H,C,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(bsz, l, h, p)[:, :l_orig]
+    return y, final_state
+
+
+def _conv1d(w, b, x, *, state=None):
+    """Causal depthwise conv over time. x (B,L,C); w (K,C). With `state`
+    (B,K-1,C) performs the single-step decode update."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+        return out + b, None
+    buf = jnp.concatenate([state, x], axis=1)                  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", buf, w)[:, None] + b
+    return out, buf[:, 1:]
+
+
+def ssm_forward(cfg, p, x, *, return_state: bool = False):
+    """Full-sequence SSD. x (B,L,D) → y (B,L,D)."""
+    d_in, h, hp, n = _dims(cfg)
+    bsz, l, _ = x.shape
+    zxbcdt = apply_linear(p["in_proj"], x)
+    z, xin, b_mat, c_mat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)
+    conv_out, _ = _conv1d(p["conv_w"], p["conv_b"], conv_in)
+    conv_out = jax.nn.silu(conv_out)
+    xin, b_mat, c_mat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    a_dt = dt * a                                                  # (B,L,H)
+    xh = xin.reshape(bsz, l, h, hp).astype(jnp.float32)
+    xh_dt = xh * dt[..., None]
+    y, state = _ssd_chunked(xh_dt, a_dt, b_mat.astype(jnp.float32),
+                            c_mat.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped rmsnorm
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = apply_linear(p["out_proj"], y)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    d_in, h, hp, n = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, h, hp, n), jnp.float32),
+    }
+
+
+def ssm_decode(cfg, p, x, cache):
+    """Single-step recurrence. x (B,1,D) → (y (B,1,D), cache)."""
+    d_in, h, hp, n = _dims(cfg)
+    bsz = x.shape[0]
+    zxbcdt = apply_linear(p["in_proj"], x)
+    z, xin, b_mat, c_mat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)
+    conv_out, conv_state = _conv1d(p["conv_w"], p["conv_b"], conv_in,
+                                   state=cache["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, b_mat, c_mat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                              # (B,H)
+    xh = xin.reshape(bsz, h, hp).astype(jnp.float32)
+    bv = b_mat[:, 0].astype(jnp.float32)                              # (B,N)
+    cv = c_mat[:, 0].astype(jnp.float32)
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bv)
+    y = jnp.einsum("bhpn,bn->bhp", state, cv) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    return apply_linear(p["out_proj"], y), {"conv": conv_state, "state": state}

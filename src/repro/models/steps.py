@@ -1,0 +1,112 @@
+"""train_step / prefill_step / decode_step builders (the dry-run units).
+
+Each builder returns a pure function of explicit state — jit-able with
+in_shardings/out_shardings at the launch layer. Microbatching (gradient
+accumulation over a lax.scan) bounds activation memory for the train_4k
+cells of the big dense archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.modules import dtype_of
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+
+def make_batch_specs(cfg: ArchConfig, batch: int, seq: int):
+    """ShapeDtypeStructs for one global train batch."""
+    specs: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.dtype(cfg.param_dtype))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.frontend == "patch":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.param_dtype))
+    specs["targets"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return specs
+
+
+def build_train_step(cfg: ArchConfig, *, num_microbatches: int = 1,
+                     peak_lr: float = 3e-4, warmup: int = 100,
+                     total_steps: int = 10000, max_grad_norm: float = 1.0):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def loss(params, mb):
+        return tf.loss_fn(params, cfg, mb)
+
+    def grads_of(params, batch):
+        if num_microbatches == 1:
+            return jax.value_and_grad(loss)(params, batch)
+
+        def mb_slice(batch, i):
+            return jax.tree_util.tree_map(
+                lambda x: x.reshape(num_microbatches,
+                                    x.shape[0] // num_microbatches,
+                                    *x.shape[1:])[i], batch)
+
+        def body(carry, i):
+            acc_l, acc_g = carry
+            l, g = jax.value_and_grad(loss)(params, mb_slice(batch, i))
+            acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+            return (acc_l + l, acc_g), None
+
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (l, g), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero_g),
+                                 jnp.arange(num_microbatches))
+        scale = 1.0 / num_microbatches
+        return l * scale, jax.tree_util.tree_map(lambda x: x * scale, g)
+
+    def train_step(params, opt_state, batch):
+        l, g = grads_of(params, batch)
+        g, gnorm = adamw.global_norm_clip(g, max_grad_norm)
+        lr = warmup_cosine(opt_state.step, peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        params, opt_state = adamw.update(opt_state, g, params, lr=lr)
+        return params, opt_state, {"loss": l, "grad_norm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    """(params, batch) → logits f32: (B, S, V), or (B, 1, V) with
+    cfg.prefill_last_only (§Perf: serving only samples the last position —
+    projecting every position through a 100k+ vocab head dominates the
+    prefill's memory/collective terms for nothing)."""
+
+    def prefill_step(params, batch):
+        enc = batch.get("image_embeds")
+        inp = (batch["frames"] if cfg.frontend == "audio"
+               else batch["tokens"])
+        if cfg.prefill_last_only and cfg.decoder:
+            from repro.models.modules import lm_logits
+            h = tf.forward(params, cfg, inp, encoder=enc)
+            return lm_logits(cfg, params, h[:, -1:])
+        return tf.logits_fn(params, cfg, inp, encoder=enc)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig):
+    """(params, cache, token (B,1), pos ()) → (logits (B,1,V), cache)."""
+
+    def decode(params, cache, token, pos):
+        return tf.decode_step(params, cfg, cache, token, pos)
+
+    return decode
+
+
+def init_all(key, cfg: ArchConfig):
+    params = tf.init_model(key, cfg)
+    opt_state = adamw.init(params)
+    return params, opt_state

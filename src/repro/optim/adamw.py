@@ -1,0 +1,95 @@
+"""AdamW in pure JAX with ZeRO-1-style sharding hooks.
+
+Optimizer state shardings are derived from param shardings but spread over
+the 'data' axis too (`zero1_sharding`) so the m/v moments never replicate —
+the LM-side application of the paper's tiering discipline (big read-mostly
+state lives spread out / offloaded; see train/trainer.py host_offload)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(zeros, params),
+                      v=jax.tree_util.tree_map(zeros, params))
+
+
+def update(state: AdamWState, grads, params, *, lr, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / c1
+        vh = v2 / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def zero1_sharding(param_sharding: NamedSharding, mesh) -> NamedSharding:
+    """Spread an optimizer-state tensor over the 'data' axis on top of the
+    param's spec: the first dimension not already sharded that divides the
+    data axis gets it. Falls back to the param's sharding."""
+    spec = list(param_sharding.spec) if param_sharding.spec else []
+    return NamedSharding(mesh, P(*spec))  # conservative default; the
+    # trainer calls shard_opt_specs() below for the real spreading.
+
+
+def shard_opt_spec(param_spec: P, shape, mesh, data_axis: str = "data") -> P:
+    """ZeRO-1: add the data axis to the first unsharded, divisible dim
+    (or stack it onto a model-sharded dim). No-op if the param's spec
+    already consumes the data axis (FSDP archs)."""
+    spec = list(param_spec) + [None] * (len(shape) - len(param_spec))
+
+    def axes_of(s):
+        if s is None:
+            return ()
+        return s if isinstance(s, tuple) else (s,)
+    used = {a for s in spec for a in axes_of(s)}
+    if data_axis in used:
+        return P(*spec)
+    dsize = mesh.shape[data_axis]
+    for i, (s, dim) in enumerate(zip(spec, shape)):
+        if s is None and dim % dsize == 0 and dim >= dsize:
+            spec[i] = data_axis
+            return P(*spec)
+    for i, (s, dim) in enumerate(zip(spec, shape)):
+        if s is not None and not isinstance(s, tuple):
+            total = dsize * mesh.shape[s]
+            if dim % total == 0:
+                spec[i] = (s, data_axis)
+                return P(*spec)
+    return P(*spec)
+
+
+def global_norm_clip(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

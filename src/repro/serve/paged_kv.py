@@ -1,0 +1,105 @@
+"""Paged KV cache with tier spill — the paper's memory-tiering discipline
+applied to serving (DESIGN.md §5 integration point).
+
+Long-context serving has the same shape as the paper's problem: a large,
+append-mostly state (KV pages ≙ the subspace), a small hot working set
+(recent pages ≙ the most-recent block), and a slow big tier to spill to
+(host DRAM ≙ SSD). This module implements:
+
+  * fixed-size KV pages with a block table per sequence (vLLM-style),
+  * LRU spill of cold pages to the TieredStore host tier with byte-exact
+    accounting (reads ≪ writes inverted here: decode *writes* one page
+    slot per token but *reads* the whole context — same read-dominated
+    profile as Table 3),
+  * gather-based attention over the page table (pure JAX; works with the
+    ring-buffer decode path for windowed archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiered import TieredStore
+
+
+@dataclasses.dataclass
+class PagedConfig:
+    page_size: int = 128          # tokens per page
+    n_kv_heads: int = 2
+    head_dim: int = 16
+    hot_pages: int = 8            # device-tier page budget per sequence
+    dtype: str = "float32"
+
+
+class PagedKVCache:
+    """Per-sequence paged KV storage over a TieredStore."""
+
+    def __init__(self, cfg: PagedConfig, store: TieredStore | None = None):
+        self.cfg = cfg
+        self.store = store or TieredStore()
+        self._tables: dict[int, list[str]] = {}   # seq id -> page names
+        self._fill: dict[int, int] = {}           # tokens written
+
+    def _page_shape(self):
+        c = self.cfg
+        return (c.page_size, c.n_kv_heads, c.head_dim)
+
+    def _new_page(self, seq: int) -> str:
+        name = f"kv/{seq}/p{len(self._tables[seq])}"
+        z = jnp.zeros((2,) + self._page_shape(), jnp.dtype(self.cfg.dtype))
+        self.store.put(name, z)
+        self._tables[seq].append(name)
+        # spill: keep only hot_pages newest on device
+        table = self._tables[seq]
+        for old in table[:-self.cfg.hot_pages]:
+            if self.store.tier_of(old) != "host":
+                self.store.demote(old)
+        return name
+
+    def start(self, seq: int) -> None:
+        self._tables[seq] = []
+        self._fill[seq] = 0
+
+    def append(self, seq: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Append one token's (K,hd) k/v."""
+        c = self.cfg
+        pos = self._fill[seq]
+        if pos % c.page_size == 0:
+            self._new_page(seq)
+        name = self._tables[seq][-1]
+        page = self.store.get(name)
+        slot = pos % c.page_size
+        page = page.at[0, slot].set(k).at[1, slot].set(v)
+        self.store.put(name, page)  # rewrite hot page (device tier)
+        self._fill[seq] = pos + 1
+
+    def length(self, seq: int) -> int:
+        return self._fill[seq]
+
+    def gather(self, seq: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Materialize (k, v) for attention: (S, K, hd) each. Cold pages
+        are read from the host tier (counted)."""
+        pages = [self.store.get(n) for n in self._tables[seq]]
+        if not pages:
+            shape = (0,) + self._page_shape()
+            z = jnp.zeros(shape, jnp.dtype(self.cfg.dtype))
+            return z, z
+        stacked = jnp.concatenate(pages, axis=1)  # (2, S_pages, K, hd)
+        s = self._fill[seq]
+        return stacked[0, :s], stacked[1, :s]
+
+    def attend(self, seq: int, q: jnp.ndarray) -> jnp.ndarray:
+        """Single-token attention over the paged context.
+        q (H, hd) with GQA groups folded → returns (H, hd)."""
+        k, v = self.gather(seq)
+        kh = self.cfg.n_kv_heads
+        h = q.shape[0]
+        g = h // kh
+        qg = q.reshape(kh, g, -1)
+        s = jnp.einsum("kgd,skd->kgs", qg, k) / np.sqrt(q.shape[-1])
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("kgs,skd->kgd", w, v)
+        return out.reshape(h, -1)

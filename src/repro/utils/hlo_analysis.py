@@ -1,0 +1,110 @@
+"""Parse collective traffic out of compiled/lowered HLO text.
+
+cost_analysis() has no collective-bytes entry, so §Roofline's collective
+term is derived here: we scan the (SPMD, per-device) HLO for collective ops,
+take the result shapes, and model per-device wire bytes with the standard
+ring-algorithm costs:
+
+  all-gather         out·(g−1)/g          (receives g−1 chunks of out/g)
+  reduce-scatter     out·(g−1)            (= in·(g−1)/g, in = g·out)
+  all-reduce         2·in·(g−1)/g         (reduce-scatter + all-gather)
+  all-to-all         in·(g−1)/g
+  collective-permute out                  (one hop)
+
+Group size g comes from replica_groups (explicit braces or iota form
+[ngroups,g]<=[N]).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every dtype[dims] occurrence in a type string
+    (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        first = m.group(1).strip()
+        return len(first.split(",")) if first else 1
+    return total_devices
+
+
+def _source_pairs(line: str) -> int:
+    m = re.search(r"source_target_pairs=\{(.*?)\}\}", line)
+    return 1 if m else 1
+
+
+def collective_bytes(hlo_text: str, total_devices: int
+                     ) -> Dict[str, float]:
+    """Per-device wire bytes by collective op kind (+ 'total')."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        # type is either a tuple "(f32[..]{..}, ...)" or a single token
+        # "f32[512,2]{1,0}" — layouts included — followed by the op call
+        opm = re.match(r"((?:\([^)]*\)|\S+))\s+"
+                       r"(all-gather-start|all-gather|all-reduce-start|"
+                       r"all-reduce|reduce-scatter|all-to-all|"
+                       r"collective-permute-start|collective-permute)\(",
+                       rhs)
+        if not opm:
+            continue
+        type_str, op = opm.group(1), opm.group(2)
+        base = op.replace("-start", "")
+        nbytes = _shape_bytes(type_str)
+        if nbytes == 0:
+            continue
+        g = _group_size(stripped, total_devices)
+        if g <= 1 and base != "collective-permute":
+            continue
+        if base == "all-gather":
+            wire = nbytes * (g - 1) / g
+        elif base == "all-reduce":
+            # start-op result type may include the input tuple; use half
+            if "start" in op:
+                nbytes = nbytes / 2 if "(" in type_str else nbytes
+            wire = 2 * nbytes * (g - 1) / g
+        elif base == "reduce-scatter":
+            wire = nbytes * (g - 1)
+        elif base == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:  # collective-permute
+            wire = nbytes
+        out[base] += wire
+        out["count_" + base] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if not k.startswith("count_") and k != "total")
+    return dict(out)

@@ -1,0 +1,23 @@
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    """Symmetric normalized-adjacency RMAT graph (n=1200) + scipy CSR."""
+    import scipy.sparse as sp
+    from repro.graphs import rmat_graph, normalized_adjacency
+    n = 1200
+    r, c, v = rmat_graph(n, 10000, seed=5, symmetric=True)
+    r2, c2, v2 = normalized_adjacency(n, r, c, v)
+    a = sp.coo_matrix((v2, (r2, c2)), shape=(n, n)).tocsr()
+    return n, r2, c2, v2, a

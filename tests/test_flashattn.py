@@ -1,0 +1,54 @@
+"""Flash-attention Pallas kernel: shape/dtype/block sweeps vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flashattn import flash_attention, flash_attention_single
+from repro.kernels.flashattn_ref import attention_ref
+
+
+@pytest.mark.parametrize("sq,sk,d,bq,bk,causal", [
+    (128, 128, 32, 32, 32, True),
+    (256, 256, 16, 64, 64, True),
+    (64, 128, 32, 32, 32, False),
+    (128, 128, 64, 128, 32, True),
+    (96, 96, 16, 32, 48, True),
+])
+def test_flash_vs_ref(sq, sk, d, bq, bk, causal, rng):
+    q = jnp.asarray(rng.standard_normal((sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((sk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((sk, d)), jnp.float32)
+    out = flash_attention_single(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q = jnp.asarray(rng.standard_normal((64, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((64, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((64, 32)), jnp.bfloat16)
+    out = flash_attention_single(q, k, v, causal=True, block_q=32,
+                                 block_k=32, interpret=True)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_batched_heads(rng):
+    b, h, s, d = 2, 3, 64, 16
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    for bi in range(b):
+        for hi in range(h):
+            ref = attention_ref(q[bi, hi], k[bi, hi], v[bi, hi],
+                                causal=True)
+            np.testing.assert_allclose(np.asarray(out[bi, hi]),
+                                       np.asarray(ref), rtol=2e-5,
+                                       atol=2e-5)

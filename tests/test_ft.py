@@ -1,0 +1,87 @@
+"""Fault-tolerance machinery: straggler decisions, coordinator membership,
+preemption guard, gradient compression."""
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dist.compress import (int8_dequantize, int8_quantize, topk_init,
+                                 topk_compress, topk_decompress)
+from repro.ft.coordinator import Coordinator
+from repro.ft.preemption import PreemptionGuard
+from repro.ft.straggler import StragglerTracker
+
+
+def test_straggler_detection():
+    t = StragglerTracker(min_steps=3)
+    for step in range(6):
+        for p in range(8):
+            t.record(p, 1.0 if p != 5 else 1.5)    # p5 runs 1.5×
+    ds = t.decisions()
+    assert len(ds) == 1 and ds[0].participant == 5
+    assert ds[0].action == "rebalance"
+
+
+def test_straggler_evict_threshold():
+    t = StragglerTracker(min_steps=3)
+    for step in range(6):
+        for p in range(4):
+            t.record(p, 1.0 if p != 2 else 5.0)
+    ds = {d.participant: d for d in t.decisions()}
+    assert ds[2].action == "evict"
+
+
+def test_coordinator_generations(tmp_path):
+    c = Coordinator(str(tmp_path), timeout=10.0)
+    c.heartbeat(0, now=100.0)
+    c.heartbeat(1, now=100.0)
+    import unittest.mock as mock
+    with mock.patch("time.time", return_value=101.0):
+        g1, m1 = c.generation()
+        assert m1 == [0, 1]
+    # node 1 dies (no heartbeat within timeout)
+    with mock.patch("time.time", return_value=115.0):
+        c.heartbeat(0)
+        g2, m2 = c.generation()
+    assert m2 == [0] and g2 == g1 + 1
+
+
+def test_preemption_guard_flag():
+    with PreemptionGuard(signals=(signal.SIGUSR1,)) as g:
+        assert not g.requested()
+        signal.raise_signal(signal.SIGUSR1)
+        assert g.requested()
+
+
+# -------------------------------------------------------- compression
+def test_int8_roundtrip_error_bound(rng):
+    x = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+    q, s = int8_quantize(x)
+    err = np.abs(np.asarray(int8_dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_topk_error_feedback_converges(seed):
+    """Error feedback: repeatedly compressing the same gradient transmits
+    it fully over time (sum of decompressed ≈ t·g for large t)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    state = topk_init(g)
+    acc = np.zeros(64, np.float32)
+    t = 24
+    for _ in range(t):
+        vals, idx, state = topk_compress(g, state, k=8)
+        acc += np.asarray(topk_decompress(vals, idx, (64,)))
+    np.testing.assert_allclose(acc / t, np.asarray(g), rtol=0.35, atol=0.35)
+
+
+def test_topk_exact_when_k_full(rng):
+    g = jnp.asarray(rng.standard_normal((32,)), jnp.float32)
+    vals, idx, state = topk_compress(g, topk_init(g), k=32)
+    np.testing.assert_allclose(np.asarray(topk_decompress(vals, idx, (32,))),
+                               np.asarray(g), rtol=1e-6)
+    assert float(jnp.max(jnp.abs(state.error))) < 1e-6

@@ -1,0 +1,145 @@
+"""Layer-level correctness: SSD vs naive recurrence, RG-LRU scan vs loop,
+chunked attention vs full, grouped MoE vs dense-expert reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import ssm as ssm_mod
+
+
+# ------------------------------------------------------------------ SSD
+def _naive_ssm(x, a_dt, b_mat, c_mat):
+    """Sequential recurrence oracle: h_t = e^{aΔ} h + Δ-scaled B x."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    state = np.zeros((bsz, h, p, n))
+    ys = np.zeros((bsz, l, h, p))
+    for t in range(l):
+        da = np.exp(a_dt[:, t])                        # (B,H)
+        state = state * da[..., None, None] + np.einsum(
+            "bhp,bn->bhpn", x[:, t], b_mat[:, t])
+        ys[:, t] = np.einsum("bhpn,bn->bhp", state, c_mat[:, t])
+    return ys, state
+
+
+@pytest.mark.parametrize("l,chunk", [(16, 4), (24, 8), (13, 8)])
+def test_ssd_chunked_vs_naive(l, chunk, rng):
+    bsz, h, p, n = 2, 3, 4, 5
+    x = rng.standard_normal((bsz, l, h, p)).astype(np.float32)
+    a_dt = -np.abs(rng.standard_normal((bsz, l, h))).astype(np.float32) * 0.3
+    b_mat = rng.standard_normal((bsz, l, n)).astype(np.float32)
+    c_mat = rng.standard_normal((bsz, l, n)).astype(np.float32)
+    y, state = ssm_mod._ssd_chunked(jnp.asarray(x), jnp.asarray(a_dt),
+                                    jnp.asarray(b_mat), jnp.asarray(c_mat),
+                                    chunk)
+    y_ref, state_ref = _naive_ssm(x, a_dt, b_mat, c_mat)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), state_ref,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunk_size_invariance(rng):
+    bsz, l, h, p, n = 1, 32, 2, 4, 4
+    x = rng.standard_normal((bsz, l, h, p)).astype(np.float32)
+    a_dt = -np.abs(rng.standard_normal((bsz, l, h))).astype(np.float32) * 0.2
+    b_mat = rng.standard_normal((bsz, l, n)).astype(np.float32)
+    c_mat = rng.standard_normal((bsz, l, n)).astype(np.float32)
+    outs = [np.asarray(ssm_mod._ssd_chunked(
+        jnp.asarray(x), jnp.asarray(a_dt), jnp.asarray(b_mat),
+        jnp.asarray(c_mat), ch)[0]) for ch in (4, 8, 16, 32)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- RG-LRU
+def test_rglru_scan_vs_sequential(rng):
+    cfg = configs.reduced("recurrentgemma-2b")
+    p = rg.init_rglru(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 10, cfg.d_model)), jnp.float32)
+    y_full, h_last = rg.rglru_forward(cfg, p, x, return_state=True)
+    cache = rg.init_rglru_cache(cfg, 2, jnp.float32)
+    ys = []
+    for t in range(10):
+        y, cache = rg.rglru_decode(cfg, p, x[:, t:t + 1], cache)
+        ys.append(np.asarray(y))
+    y_seq = np.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_seq, np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache["h"]), np.asarray(h_last),
+                               rtol=2e-3, atol=2e-3)
+
+
+# -------------------------------------------------------------- attention
+def test_chunked_attention_matches_full(rng):
+    cfg = configs.reduced("yi-9b")
+    p = att.init_attn(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 2048, cfg.d_model)),
+                    jnp.float32)
+    pos = jnp.arange(2048, dtype=jnp.float32)
+    full = att.attn_forward(cfg, p, x[:, :att.Q_CHUNK], pos[:att.Q_CHUNK])
+    chunked_prefix = att.attn_forward(cfg, p, x, pos)[:, :att.Q_CHUNK]
+    np.testing.assert_allclose(np.asarray(chunked_prefix), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_swa_masks_far_tokens(rng):
+    cfg = dataclasses.replace(configs.reduced("h2o-danube-3-4b"), window=4)
+    p = att.init_attn(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)), jnp.float32)
+    pos = jnp.arange(16, dtype=jnp.float32)
+    y_swa = att.attn_forward(cfg, p, x, pos, kind="swa")
+    # perturb a token >window away from the last position: no effect
+    x2 = x.at[:, 2].add(10.0)
+    y2 = att.attn_forward(cfg, p, x2, pos, kind="swa")
+    np.testing.assert_allclose(np.asarray(y_swa[:, -1]),
+                               np.asarray(y2[:, -1]), rtol=1e-4, atol=1e-4)
+    # causal attention *does* see it
+    y_c = att.attn_forward(cfg, p, x, pos, kind="causal")
+    y_c2 = att.attn_forward(cfg, p, x2, pos, kind="causal")
+    assert float(jnp.max(jnp.abs(y_c[:, -1] - y_c2[:, -1]))) > 1e-4
+
+
+# ------------------------------------------------------------------- MoE
+def test_moe_matches_dense_expert_reference(rng):
+    cfg = configs.reduced("grok-1-314b")   # cf=8 → no drops at this scale
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    out = moe_mod.moe_forward(cfg, p, x)
+    # dense reference: route every token through its top-k experts directly
+    from repro.models.modules import apply_linear, act_fn
+    logits = apply_linear(p["router"], x)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gv, gi = jax.lax.top_k(probs, cfg.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = np.zeros(x.shape, np.float32)
+    xn = np.asarray(x)
+    for b in range(x.shape[0]):
+        for s in range(x.shape[1]):
+            acc = np.zeros(cfg.d_model, np.float32)
+            for k in range(cfg.top_k):
+                e = int(gi[b, s, k])
+                h = xn[b, s] @ np.asarray(p["up"][e])
+                h = np.asarray(act_fn(cfg)(
+                    jnp.asarray(xn[b, s] @ np.asarray(p["gate"][e])))) * h
+                acc += float(gv[b, s, k]) * (h @ np.asarray(p["down"][e]))
+            ref[b, s] = acc
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_tokens(rng):
+    cfg = dataclasses.replace(configs.reduced("grok-1-314b"),
+                              capacity_factor=0.25)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((1, 32, cfg.d_model)), jnp.float32)
+    out = moe_mod.moe_forward(cfg, p, x)
+    assert np.isfinite(np.asarray(out)).all()
+    # some token outputs must be exactly zero (dropped)
+    norms = np.linalg.norm(np.asarray(out)[0], axis=-1)
+    assert (norms < 1e-7).any()

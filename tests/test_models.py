@@ -1,0 +1,122 @@
+"""Per-arch smoke tests (reduced configs): one train step on CPU, output
+shapes + finite values; decode-vs-forward consistency for decoder archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import steps as S
+from repro.models import transformer as tf
+
+ARCHS = list(configs.ARCHS)
+
+
+def _batch(cfg, rng, b=2, l=16):
+    batch = {}
+    if cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, l, cfg.d_model)), jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, l)), jnp.int32)
+    if cfg.frontend == "patch":
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    batch["targets"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, l)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, rng):
+    cfg = configs.reduced(arch)
+    params, opt = S.init_all(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng)
+    step = jax.jit(S.build_train_step(cfg))
+    p2, o2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    logits = jax.jit(S.build_prefill_step(cfg))(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if configs.get(a).decoder])
+def test_decode_matches_forward(arch, rng):
+    cfg = configs.reduced(arch)
+    params = tf.init_model(jax.random.PRNGKey(1), cfg)
+    b, l = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, l)), jnp.int32)
+    enc = None
+    if cfg.frontend == "patch":
+        enc = jnp.asarray(rng.standard_normal(
+            (b, cfg.n_frontend_tokens, cfg.d_model)), jnp.float32)
+    full = tf.logits_fn(params, cfg, toks, encoder=enc)
+    p0 = l - 4
+    pl, cache = tf.prefill_with_cache(params, cfg, toks[:, :p0],
+                                      encoder=enc, cache_len=l)
+    np.testing.assert_allclose(np.asarray(pl), np.asarray(full[:, :p0]),
+                               rtol=2e-3, atol=2e-3)
+    dec = jax.jit(S.build_decode_step(cfg))
+    for t in range(p0, l):
+        logits, cache = dec(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_swa_ring_buffer_caps_cache(rng):
+    """long-context decode for SWA archs stores only the window."""
+    cfg = configs.reduced("h2o-danube-3-4b")
+    cache = tf.init_cache(cfg, 2, min(500000, cfg.window))
+    assert cache["stack"]["l0"]["k"].shape[2] == cfg.window
+
+
+def test_microbatched_train_matches_full(rng):
+    cfg = configs.reduced("yi-9b")
+    params, opt = S.init_all(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng, b=4, l=8)
+    s1 = jax.jit(S.build_train_step(cfg, num_microbatches=1))
+    s2 = jax.jit(S.build_train_step(cfg, num_microbatches=2))
+    _, _, m1 = s1(params, opt, batch)
+    _, _, m2 = s2(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m2["grad_norm"]), rtol=1e-3)
+
+
+def test_param_counts_match_names():
+    expect = {
+        "grok-1-314b": 314e9, "arctic-480b": 480e9, "yi-9b": 9e9,
+        "qwen2-1.5b": 1.5e9, "h2o-danube-3-4b": 4e9,
+        "mistral-large-123b": 123e9, "hubert-xlarge": 1e9,
+        "mamba2-780m": 780e6,
+    }
+    for arch, want in expect.items():
+        got = configs.get(arch).param_count()
+        assert 0.7 * want <= got <= 1.35 * want, (arch, got, want)
+
+
+def test_moe_active_params_smaller():
+    for arch in ("grok-1-314b", "arctic-480b"):
+        cfg = configs.get(arch)
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_shape_applicability_table():
+    from repro.configs.base import SHAPES, shape_applicable
+    cells = [(a, s) for a in configs.ARCHS for s in SHAPES
+             if shape_applicable(configs.get(a), SHAPES[s])[0]]
+    skipped = 10 * 4 - len(cells)
+    assert skipped == 8            # DESIGN.md §5: exactly 8 documented skips
+    ok, why = shape_applicable(configs.get("hubert-xlarge"),
+                               SHAPES["decode_32k"])
+    assert not ok and "encoder-only" in why
+    ok, why = shape_applicable(configs.get("yi-9b"), SHAPES["long_500k"])
+    assert not ok and "full-attention" in why
+    for a in ("mamba2-780m", "recurrentgemma-2b", "h2o-danube-3-4b"):
+        assert shape_applicable(configs.get(a), SHAPES["long_500k"])[0]

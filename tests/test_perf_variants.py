@@ -1,0 +1,105 @@
+"""§Perf hillclimb features must be exact (not approximations)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import steps as S
+from repro.models import transformer as tf
+
+
+def test_moe_decode_regroup_exact(rng):
+    cfg0 = configs.reduced("arctic-480b")
+    cfg1 = dataclasses.replace(cfg0, moe_decode_regroup=True)
+    params = tf.init_model(jax.random.PRNGKey(1), cfg0)
+    b, l = 4, 10
+    toks = jnp.asarray(rng.integers(0, cfg0.vocab_size, (b, l)), jnp.int32)
+    _, cache = tf.prefill_with_cache(params, cfg0, toks[:, :l - 1],
+                                     cache_len=l)
+    l0, _ = jax.jit(S.build_decode_step(cfg0))(params, cache,
+                                               toks[:, l - 1:],
+                                               jnp.int32(l - 1))
+    l1, _ = jax.jit(S.build_decode_step(cfg1))(params, cache,
+                                               toks[:, l - 1:],
+                                               jnp.int32(l - 1))
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_last_only_matches_full(rng):
+    base = configs.reduced("recurrentgemma-2b")
+    opt = dataclasses.replace(base, prefill_last_only=True)
+    params = tf.init_model(jax.random.PRNGKey(2), base)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, base.vocab_size, (2, 12)), jnp.int32)}
+    full = S.build_prefill_step(base)(params, batch)
+    last = S.build_prefill_step(opt)(params, batch)
+    assert last.shape == (2, 1, base.vocab_size)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_residual_close_to_f32(rng):
+    base = dataclasses.replace(configs.reduced("yi-9b"),
+                               param_dtype="bfloat16")
+    opt = dataclasses.replace(base, bf16_residual=True)
+    params = tf.init_model(jax.random.PRNGKey(3), base)
+    toks = jnp.asarray(rng.integers(0, base.vocab_size, (2, 8)), jnp.int32)
+    a = tf.logits_fn(params, base, toks)
+    b = tf.logits_fn(params, opt, toks)
+    # bf16 residual rounding: small relative error, not exact
+    denom = np.maximum(np.abs(np.asarray(a)), 1.0)
+    assert (np.abs(np.asarray(a) - np.asarray(b)) / denom).max() < 0.1
+
+
+def test_compressed_eigen_step_matches_baseline():
+    """The uint16-packed + bf16 compressed Krylov step (page-cell variant)
+    must agree with the baseline step to bf16 tolerance."""
+    import subprocess, sys, os, textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, numpy as np, jax.numpy as jnp
+        import ml_dtypes
+        from repro.dist.layout import padded_n, vertex_permutation
+        from repro.dist.dspmm import (build_eigen_step,
+            build_eigen_step_compressed, pack_edge_panels,
+            pack_compressed_panels)
+        from repro.graphs import rmat_graph
+        mesh = jax.make_mesh((2,2,2), ("pod","data","model"))
+        R, M, n, b, nb_v = 4, 2, 400, 2, 2
+        r, c, v = rmat_graph(n, 3000, seed=4, symmetric=True)
+        n_pad = padded_n(n, R, M)
+        perm = vertex_permutation(n_pad, R, M)
+        pc, pr, pv, e_loc = pack_edge_panels(n_pad, perm[r], perm[c], v,
+                                             r_groups=R, m_groups=M)
+        packed, bases, valsb = pack_compressed_panels(pc, pr, pv)
+        rng = np.random.default_rng(0)
+        vb = np.linalg.qr(rng.standard_normal((n_pad, nb_v*b)))[0]
+        vstack = np.ascontiguousarray(
+            vb.reshape(n_pad, nb_v, b).transpose(1,0,2)).astype(np.float32)
+        x = rng.standard_normal((n_pad, b)).astype(np.float32)
+        f0 = build_eigen_step(mesh, n_pad=n_pad, e_loc=e_loc, b=b, nb_v=nb_v)
+        q0, h0, r0 = f0(jnp.array(pc), jnp.array(pr), jnp.array(pv),
+                        jnp.array(vstack), jnp.array(x))
+        f1, n_chunks, e_pad = build_eigen_step_compressed(
+            mesh, n_pad=n_pad, e_loc=e_loc, b=b, nb_v=nb_v)
+        q1, h1, r1 = f1(jnp.array(packed), jnp.array(bases),
+                        jnp.array(valsb),
+                        jnp.array(vstack.astype(ml_dtypes.bfloat16)),
+                        jnp.array(x.astype(ml_dtypes.bfloat16)))
+        rel = np.abs(np.asarray(q0)-np.asarray(q1)).max()
+        hrel = np.abs(np.asarray(h0)-np.asarray(h1)).max() / \\
+            max(np.abs(np.asarray(h0)).max(), 1e-9)
+        assert rel < 0.15 and hrel < 0.05, (rel, hrel)   # bf16 tolerance
+        print("COMPRESSED_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "COMPRESSED_OK" in out.stdout
