@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification, reproducible on CPU-only boxes.
+#
+# The multi-device tests (tests/test_distributed.py, the compressed
+# eigen-step check in tests/test_perf_variants.py) run their mesh code in
+# subprocesses; DIST_SUBPROCESS_XLA_FLAGS pins those subprocesses to 8
+# forced host devices. The pin must NOT be exported as XLA_FLAGS to the
+# main pytest process: the dry-run contract requires the main process to
+# keep seeing exactly 1 device
+# (tests/test_distributed.py::test_main_process_sees_one_device), and
+# repro.launch.dryrun forces its own 512-device flag in-process.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+export DIST_SUBPROCESS_XLA_FLAGS="--xla_force_host_platform_device_count=8"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

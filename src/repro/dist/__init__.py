@@ -1,0 +1,20 @@
+"""Distributed sharded-SpMM eigensolver layer (paper §3: SEM-SpMM).
+
+layout   — vertex -> (pod, data, model) mesh placement, padding, panels
+dspmm    — packed edge panels, sharded SpMM, fused eigen expansion step
+compress — int8-scaled cross-pod reductions
+"""
+from repro.dist.layout import padded_n, vertex_permutation
+from repro.dist.dspmm import (CHUNK, build_dspmm, build_eigen_step,
+                              build_eigen_step_compressed, edge_spec,
+                              pack_compressed_panels, pack_edge_panels,
+                              vector_spec)
+from repro.dist.compress import compressed_psum_pod
+
+__all__ = [
+    "padded_n", "vertex_permutation",
+    "CHUNK", "build_dspmm", "build_eigen_step",
+    "build_eigen_step_compressed", "edge_spec", "pack_compressed_panels",
+    "pack_edge_panels", "vector_spec",
+    "compressed_psum_pod",
+]

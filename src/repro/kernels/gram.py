@@ -54,7 +54,7 @@ def gram(a: jnp.ndarray, b: jnp.ndarray, alpha: float | jnp.ndarray = 1.0,
         _gram_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, bcols), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="gram",

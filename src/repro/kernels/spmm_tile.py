@@ -76,7 +76,7 @@ def spmm_blocksparse(blocks: jnp.ndarray, block_cols: jnp.ndarray,
         _spmm_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, k), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="spmm_blocksparse",

@@ -52,7 +52,7 @@ def tsgemm(a: jnp.ndarray, b: jnp.ndarray, c0: jnp.ndarray,
         _tsgemm_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, bcols), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="tsgemm",

@@ -1,9 +1,47 @@
+import os
+import subprocess
+import sys
+import textwrap
 import warnings
 
 import numpy as np
 import pytest
 
 warnings.filterwarnings("ignore")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def run_forced_mesh():
+    """Run python `code` in a subprocess pinned to forced host devices.
+
+    Multi-device mesh tests need >1 device while the main test process
+    must keep seeing exactly 1 (the dry-run contract), so they run in
+    subprocesses. scripts/run_tier1.sh pins DIST_SUBPROCESS_XLA_FLAGS for
+    reproducibility on CPU-only boxes; the default matches the pin.
+    """
+    def run(code: str, timeout: float = 420) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = env.get(
+            "DIST_SUBPROCESS_XLA_FLAGS",
+            "--xla_force_host_platform_device_count=8")
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, env=env,
+                             timeout=timeout)
+        assert out.returncode == 0, out.stdout + out.stderr
+        return out.stdout
+    return run
+
+# Graceful skip for property-based test modules when hypothesis is not
+# installed (see requirements-dev.txt): ignoring them at collection keeps
+# the rest of the suite collectable instead of erroring the whole session.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore = ["test_ft.py", "test_ortho.py", "test_partition.py",
+                      "test_tiles.py"]
 
 
 @pytest.fixture(scope="session")

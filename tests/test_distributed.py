@@ -1,25 +1,7 @@
 """Distributed-layer tests. Collective tests need >1 device, so they run in
 a subprocess with forced host devices (the main test process must keep
-seeing 1 device, per the dry-run contract)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_sub(code: str):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=420)
-    assert out.returncode == 0, out.stdout + out.stderr
-    return out.stdout
+seeing 1 device, per the dry-run contract). The subprocess harness is the
+shared `run_forced_mesh` fixture in conftest.py."""
 
 
 def test_main_process_sees_one_device():
@@ -27,8 +9,8 @@ def test_main_process_sees_one_device():
     assert len(jax.devices()) == 1
 
 
-def test_distributed_spmm_and_eigenstep():
-    out = run_sub("""
+def test_distributed_spmm_and_eigenstep(run_forced_mesh):
+    out = run_forced_mesh("""
         import warnings; warnings.filterwarnings('ignore')
         import jax, numpy as np, jax.numpy as jnp
         from repro.dist.layout import padded_n, vertex_permutation
@@ -77,8 +59,8 @@ def test_distributed_spmm_and_eigenstep():
     assert "DIST_OK" in out
 
 
-def test_compressed_pod_psum():
-    out = run_sub("""
+def test_compressed_pod_psum(run_forced_mesh):
+    out = run_forced_mesh("""
         import warnings; warnings.filterwarnings('ignore')
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P

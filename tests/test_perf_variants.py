@@ -54,15 +54,11 @@ def test_bf16_residual_close_to_f32(rng):
     assert (np.abs(np.asarray(a) - np.asarray(b)) / denom).max() < 0.1
 
 
-def test_compressed_eigen_step_matches_baseline():
+def test_compressed_eigen_step_matches_baseline(run_forced_mesh):
     """The uint16-packed + bf16 compressed Krylov step (page-cell variant)
-    must agree with the baseline step to bf16 tolerance."""
-    import subprocess, sys, os, textwrap
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env["PYTHONPATH"] = os.path.join(repo, "src")
-    code = textwrap.dedent("""
+    must agree with the baseline step to bf16 tolerance. Runs in the shared
+    forced-device subprocess harness (conftest.run_forced_mesh)."""
+    code = """
         import warnings; warnings.filterwarnings('ignore')
         import jax, numpy as np, jax.numpy as jnp
         import ml_dtypes
@@ -98,8 +94,5 @@ def test_compressed_eigen_step_matches_baseline():
             max(np.abs(np.asarray(h0)).max(), 1e-9)
         assert rel < 0.15 and hrel < 0.05, (rel, hrel)   # bf16 tolerance
         print("COMPRESSED_OK")
-    """)
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=420)
-    assert out.returncode == 0, out.stdout + out.stderr
-    assert "COMPRESSED_OK" in out.stdout
+    """
+    assert "COMPRESSED_OK" in run_forced_mesh(code)
