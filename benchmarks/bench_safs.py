@@ -1,0 +1,95 @@
+"""SAFS page store — Table 3 / §3.4.2 measurements on the file backend.
+
+Three ladders, all on a scaled-down subspace streamed from real page files:
+
+  safs_stream      MvTimesMatAddMv with the subspace on disk, prefetch OFF
+                   vs ON — the §3.4.2 claim that overlapping page reads
+                   with compute recovers most of the in-memory rate; the
+                   derived column reports the overlap seconds (acceptance:
+                   nonzero).
+  safs_endurance   physical disk writes vs logical tier writes during an
+                   append+restart-compress cycle — write-back + pinning
+                   keep the medium's write traffic at or below logical
+                   (Table 3 endurance argument).
+  safs_cache       page-cache hit rate for the reorthogonalization re-read
+                   pattern (most-recent-block pinning, §3.4.4).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MultiVector, TieredStore
+
+
+def _mk(store, n, m, b, group_size=2):
+    rng = np.random.default_rng(0)
+    mv = MultiVector(store, n, group_size=group_size, impl="ref")
+    for _ in range(m // b):
+        mv.append_block(jnp.asarray(rng.standard_normal((n, b)), jnp.float32))
+    return mv
+
+
+def _safs_store(root, n, b, *, enable_prefetch):
+    # cache holds ~3 blocks of a >8-block subspace: genuinely streaming
+    # 64 KiB pages: SAFS's 4 KiB default is faithful but the python page
+    # loop dominates at that grain; the I/O ratios are page-size invariant
+    return TieredStore(
+        device_budget_bytes=2 * n * 4 * b, backend="safs",
+        backend_opts={"root": root, "cache_bytes": 3 * n * 4 * b,
+                      "page_size": 65536,
+                      "enable_prefetch": enable_prefetch})
+
+
+def run(csv_rows: list):
+    n, b, m = 60000, 4, 64          # subspace 16 blocks, ~15 MB on disk
+    small = jnp.asarray(
+        np.random.default_rng(1).standard_normal((m, b)), jnp.float32)
+    root = tempfile.mkdtemp(prefix="bench_safs_")
+    try:
+        for tag, pref in (("prefetch_off", False), ("prefetch_on", True)):
+            store = _safs_store(os.path.join(root, tag), n, b,
+                                enable_prefetch=pref)
+            mv = _mk(store, n, m, b)
+            store.flush()
+            store.reset_stats()
+            t0 = time.perf_counter()
+            mv.mv_times_mat(small)
+            if pref:
+                store.backend.prefetcher.drain()
+            us = (time.perf_counter() - t0) * 1e6
+            ov = store.backend.prefetcher.stats()["overlap_seconds"]
+            csv_rows.append(("safs_stream", f"m={m},{tag}", us,
+                             f"overlap_s={ov:.4f}"))
+            store.close()
+
+        # endurance: logical vs physical writes over append + compress
+        store = _safs_store(os.path.join(root, "endurance"), n, b,
+                            enable_prefetch=True)
+        mv = _mk(store, n, m, b)
+        q = jnp.asarray(np.random.default_rng(2)
+                        .standard_normal((m, m // 2)), jnp.float32)
+        t0 = time.perf_counter()
+        mv.compress(q, [b] * (m // 2 // b))
+        us = (time.perf_counter() - t0) * 1e6
+        store.flush()
+        logical_w = store.stats.host_bytes_written
+        physical_w = store.backend.stats.host_bytes_written
+        csv_rows.append(("safs_endurance", f"m={m}", us,
+                         f"disk_over_logical_writes="
+                         f"{physical_w / max(logical_w, 1):.2f}"))
+
+        # reorth re-read pattern: newest block re-read right after demote
+        d = store.backend.stats
+        hit_rate = d.cache_hits / max(d.cache_hits + d.cache_misses, 1)
+        csv_rows.append(("safs_cache", f"m={m}", 0.0,
+                         f"page_hit_rate={hit_rate:.2f}"))
+        store.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return csv_rows

@@ -11,10 +11,11 @@ import sys
 
 def main() -> None:
     from benchmarks import bench_spmm, bench_tasops, bench_eigen, \
-        bench_roofline
+        bench_roofline, bench_safs
     rows: list = []
     mods = {"spmm": bench_spmm, "tasops": bench_tasops,
-            "eigen": bench_eigen, "roofline": bench_roofline}
+            "eigen": bench_eigen, "roofline": bench_roofline,
+            "safs": bench_safs}
     selected = sys.argv[1:] or list(mods)
     for name in selected:
         mods[name].run(rows)

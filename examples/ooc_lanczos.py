@@ -1,0 +1,108 @@
+"""End-to-end out-of-core eigensolve with the subspace on disk (SAFS).
+
+    PYTHONPATH=src python examples/ooc_lanczos.py [--n 4000] [--nev 8]
+        [--solver ks|lanczos] [--root DIR]
+
+This is the full paper pipeline at laptop scale: an RMAT graph, the
+semi-external SpMM operator, and the Krylov–Schur (or block-Lanczos
+baseline) loop with the *entire vector subspace living in SAFS page files*
+(`TieredStore(backend="safs")`, §3.4.1) — every host-tier byte physically
+traverses the filesystem through the LRU page cache, with dirty-page
+write-back and async prefetch double-buffering the grouped streams.
+
+The driver runs the identical solve on the ram backend and asserts the two
+spectra agree to rtol 1e-5 (the out-of-core machinery is bit-honest, not
+approximate), then reports:
+
+  * logical tier traffic (reads ≫ writes — the paper's write-avoidance,
+    Table 3: 145 TB read vs 4 TB written, ratio 0.028);
+  * physical disk traffic (≤ logical: the page cache absorbs re-reads);
+  * prefetch overlap seconds (reads hidden behind compute, §3.4.2);
+  * a direct-from-pages checkpoint snapshot (no RAM round-trip).
+"""
+import argparse
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs import rmat_graph, normalized_adjacency, pack_tiles
+from repro.core import GraphOperator, TieredStore, eigsh, lanczos_eigsh
+from repro.ckpt import checkpoint as ck
+
+
+def solve(image, n, nev, *, solver, store):
+    op = GraphOperator(image, store=store, impl="ref")
+    fn = eigsh if solver == "ks" else lanczos_eigsh
+    kw = ({"tol": 1e-7, "max_restarts": 100} if solver == "ks" else {})
+    return fn(op, nev, block_size=4, store=store, impl="ref",
+              group_size=2, **kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--nnz", type=int, default=48000)
+    ap.add_argument("--nev", type=int, default=8)
+    ap.add_argument("--solver", choices=("ks", "lanczos"), default="ks")
+    ap.add_argument("--root", default=None,
+                    help="directory for the SAFS page files (default: tmp)")
+    args = ap.parse_args()
+
+    print(f"building RMAT graph: {args.n} vertices, ~{args.nnz} edges")
+    r, c, v = rmat_graph(args.n, args.nnz, seed=1, symmetric=True)
+    r, c, v = normalized_adjacency(args.n, r, c, v)
+    image = pack_tiles(args.n, args.n, r, c, v, block_shape=(64, 64),
+                       min_block_nnz=4)
+
+    # in-memory reference: identical solve, ram backend
+    ram_store = TieredStore(device_budget_bytes=2 * args.n * 4 * 4)
+    ram = solve(image, args.n, args.nev, solver=args.solver, store=ram_store)
+
+    root = args.root or tempfile.mkdtemp(prefix="ooc_lanczos_")
+    own_tmp = args.root is None
+    # small page cache (subspace ≫ cache) → bytes genuinely stream from disk
+    safs_store = TieredStore(
+        device_budget_bytes=2 * args.n * 4 * 4, backend="safs",
+        backend_opts={"root": os.path.join(root, "pages"),
+                      "cache_bytes": args.n * 4 * 4 * 3})
+    disk = solve(image, args.n, args.nev, solver=args.solver,
+                 store=safs_store)
+
+    w_ram = np.sort(ram.eigenvalues)
+    w_disk = np.sort(disk.eigenvalues)
+    print(f"eigenvalues (safs): {np.round(w_disk, 6)}")
+    np.testing.assert_allclose(w_disk, w_ram, rtol=1e-5)
+    print("safs backend matches ram backend to rtol 1e-5")
+
+    s = safs_store.stats
+    d = safs_store.backend.stats
+    pf = safs_store.backend.prefetcher.stats()
+    ratio = s.host_bytes_written / max(s.host_bytes_read, 1)
+    print(f"logical tier I/O:  read {s.host_bytes_read/1e6:8.1f} MB, "
+          f"wrote {s.host_bytes_written/1e6:6.1f} MB "
+          f"(write/read = {ratio:.4f}; paper Table 3: 0.028)")
+    print(f"physical disk I/O: read {d.host_bytes_read/1e6:8.1f} MB, "
+          f"wrote {d.host_bytes_written/1e6:6.1f} MB "
+          f"(page-cache hits {d.cache_hits}, misses {d.cache_misses})")
+    print(f"prefetch: {pf['bytes_prefetched']/1e6:.1f} MB staged, "
+          f"{pf['overlap_seconds']*1e3:.1f} ms of reads overlapped compute")
+    assert s.host_bytes_read > 10 * s.host_bytes_written, \
+        "tier must be read-dominated (write-avoidance)"
+
+    # checkpoint straight from the page files (no RAM round-trip)
+    ckroot = os.path.join(root, "ckpt")
+    path = ck.save_safs(ckroot, 1, safs_store,
+                        extra={"eigenvalues": list(map(float, w_disk))})
+    print(f"page snapshot: {path} "
+          f"({sum(e.stat().st_size for e in os.scandir(path))/1e6:.1f} MB)")
+
+    safs_store.close()
+    if own_tmp:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

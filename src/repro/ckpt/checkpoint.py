@@ -127,6 +127,77 @@ def gc_old(root: str, keep: int = 3) -> None:
         shutil.rmtree(os.path.join(root, f"step_{s:010d}"), ignore_errors=True)
 
 
+# -------------------------------------------------------- SAFS page snapshots
+def save_safs(root: str, step: int, store, *, extra: dict | None = None
+              ) -> str:
+    """Snapshot a safs-backed TieredStore's page files — no RAM round-trip.
+
+    The subspace already lives on disk as SAFS page files (§3.4.1), so the
+    checkpoint is a flush (journaled write-back of dirty pages) plus a
+    kernel-side file copy (`shutil.copyfile` → copy_file_range/sendfile on
+    Linux) of each page file and its sidecar into the checkpoint dir. The
+    arrays are never assembled in host memory. Same atomic-manifest
+    contract as `save` (tmp dir, manifest last, atomic rename); use a
+    separate checkpoint root from tree checkpoints — `restore` and
+    `restore_safs` are not interchangeable.
+    """
+    from repro.core.tiered import DEVICE
+    from repro.safs.backend import SafsBackend
+    backend = getattr(store, "backend", store)
+    if not isinstance(backend, SafsBackend):
+        raise TypeError("save_safs needs a safs-backed store; got "
+                        f"{type(backend).__name__}")
+    # Device-tier entries with no current host copy (the newest subspace
+    # block is pinned on device per §3.4.4) must be written through first,
+    # or the snapshot would silently miss them. Residency is unchanged;
+    # the entry just becomes clean-with-host-copy, like after a promote.
+    for e in getattr(store, "_entries", {}).values():
+        if e.tier == DEVICE and (e.dirty or not e.has_host):
+            backend.store(e.data_id, np.asarray(e.device_val))
+            e.has_host, e.dirty = True, False
+    backend.flush()
+    final = os.path.join(root, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    data_ids = backend.data_ids()
+    for data_id in data_ids:
+        pf = backend.pagefile(data_id)
+        for src in (pf.path, pf.path + ".meta"):
+            shutil.copyfile(src, os.path.join(tmp, os.path.basename(src)))
+    manifest = {"step": step, "kind": "safs_pages", "data_ids": data_ids,
+                "page_size": backend.page_size, "extra": extra or {}}
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def restore_safs(root: str, step: int, dest_root: str):
+    """Rehydrate a page snapshot into a fresh SafsBackend at dest_root.
+
+    Copies the page files back (kernel-side) and reopens them; returns
+    (backend, extra). Pages are faulted in lazily through the page cache on
+    first access — restore itself still does no RAM round-trip.
+    """
+    from repro.safs.backend import SafsBackend
+    path = os.path.join(root, f"step_{step:010d}")
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != "safs_pages":
+        raise ValueError(f"not a safs page snapshot: {path}")
+    os.makedirs(dest_root, exist_ok=True)
+    for fname in os.listdir(path):
+        if fname.endswith(".pages") or fname.endswith(".pages.meta"):
+            shutil.copyfile(os.path.join(path, fname),
+                            os.path.join(dest_root, fname))
+    backend = SafsBackend(dest_root, page_size=manifest["page_size"])
+    return backend, manifest["extra"]
+
+
 class AsyncWriter:
     """Overlap checkpoint writes with compute (one in flight at a time)."""
 

@@ -63,6 +63,10 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
 
     Defaults follow the paper's parameter study (§4.3): block size b,
     num_blocks NB with subspace m = b·NB; NB defaults to 2·ceil(nev/b)+2.
+
+    Pass `store=TieredStore(backend="safs", backend_opts={"root": dir})`
+    to keep the subspace in SAFS page files on disk (§3.4.1) instead of
+    the default in-RAM emulation — the solver code is backend-agnostic.
     """
     b = block_size
     if num_blocks is None:

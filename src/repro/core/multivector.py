@@ -12,7 +12,11 @@ operations of Table 1 are implemented block-streamed:
     (the paper's lazy evaluation, §3.4.4), costing zero I/O;
   * the newest block is pinned in the device tier (most-recent-block cache);
   * transpose/CloneView share `data_id` with their parent so the cache
-    recognizes identical bytes.
+    recognizes identical bytes;
+  * grouped streaming double-buffers: before contracting group g the next
+    group's blocks are handed to `TieredStore.prefetch`, so with the file
+    backend (`TieredStore(backend="safs")`, §3.4.1) page reads overlap the
+    JAX compute of the current group (a no-op on the default ram backend).
 """
 from __future__ import annotations
 
@@ -39,11 +43,15 @@ class MultiVector:
 
     _counter = 0
 
-    def __init__(self, store: TieredStore, n: int, *, name: str | None = None,
-                 group_size: int = 8, impl: kops.Impl = "auto"):
+    def __init__(self, store: TieredStore | None, n: int, *,
+                 name: str | None = None, group_size: int = 8,
+                 impl: kops.Impl = "auto", backend="ram",
+                 backend_opts: dict | None = None):
         if name is None:
             MultiVector._counter += 1
             name = f"mv{MultiVector._counter}"
+        if store is None:  # own store on the requested backend ("ram"|"safs")
+            store = TieredStore(backend=backend, backend_opts=backend_opts)
         self.store = store
         self.n = n
         self.name = name
@@ -65,6 +73,12 @@ class MultiVector:
 
     def _block_name(self, i: int) -> str:
         return self._blocks[i].name
+
+    def _prefetch_group(self, g0: int) -> None:
+        """Double-buffer: stage the next group's blocks (async backend I/O
+        overlapping the current group's compute; no-op on ram backend)."""
+        self.store.prefetch([b.name for b in
+                             self._blocks[g0:g0 + self.group_size]])
 
     def block(self, i: int) -> jnp.ndarray:
         """Materialize block i (applies any lazy scale)."""
@@ -139,6 +153,7 @@ class MultiVector:
         acc = jnp.zeros((self.n, k), jnp.float32)
         off = 0
         for g0 in range(0, self.nblocks, self.group_size):
+            self._prefetch_group(g0 + self.group_size)
             for i in range(g0, min(g0 + self.group_size, self.nblocks)):
                 b = self._blocks[i]
                 rows = small[off:off + b.ncols, :]
@@ -159,6 +174,8 @@ class MultiVector:
         once because it stays in the device tier)."""
         parts = []
         for i, b in enumerate(self._blocks):
+            if i % self.group_size == 0:
+                self._prefetch_group(i + self.group_size)
             g = kops.gram(self.store.get(b.name), other,
                           alpha=alpha * b.scale, impl=self.impl)
             parts.append(g)

@@ -3,13 +3,24 @@
 The paper keeps the Krylov subspace on SSD (§3.4) and fights for two
 resources: read bandwidth and *write endurance* (DWPD). On a TPU the slow
 tier is host DRAM reached over PCIe (`memory_kind='pinned_host'`); in this
-CPU container we emulate the tier split (device tier = jax arrays, host tier
-= numpy buffers) while keeping the accounting byte-exact, so the paper's
-Table-3 read/write claims are validated quantitatively by the benchmarks.
+CPU container the tier split is emulated with a pluggable storage backend
+(`repro.safs.backend`):
+
+  backend="ram"   numpy buffers in host memory (the default; tier-1 tests);
+  backend="safs"  the paper's real layer — one page file per data_id under
+                  `backend_opts["root"]`, an LRU page cache with write-back
+                  and most-recent-block pinning, and async prefetch
+                  (`TieredStore.prefetch`) overlapping reads with compute.
+
+Either way `stats` stays byte-exact *logical* tier traffic, so the paper's
+Table-3 read/write claims are validated quantitatively by the benchmarks;
+with safs the backend's own `stats` additionally count physical disk bytes
+(endurance — less than logical whenever the page cache absorbs re-reads).
 
 Policies implemented from §3.4.4:
   * most-recent-block caching — the newest subspace block stays in the
-    device tier (it is about to be re-read by reorthogonalization);
+    device tier (it is about to be re-read by reorthogonalization), and the
+    most recently *demoted* block's pages stay pinned in the page cache;
   * data identifiers — a transposed view shares its parent's identifier so
     cached bytes are recognized (we key the cache by `data_id`, not by
     object);
@@ -18,7 +29,7 @@ Policies implemented from §3.4.4:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,9 +57,9 @@ class _Entry:
     data_id: str
     tier: str
     device_val: Optional[jnp.ndarray]
-    host_val: Optional[np.ndarray]
+    has_host: bool                 # backend holds a copy of data_id
     nbytes: int
-    dirty: bool  # device copy newer than host copy
+    dirty: bool                    # device copy newer than host copy
 
 
 class TieredStore:
@@ -57,23 +68,27 @@ class TieredStore:
     device_budget_bytes caps the *device* tier; putting past the budget
     demotes the least-recently-used non-pinned entries to the host tier
     (counted as SSD writes if dirty). `pin` marks the most-recent subspace
-    block per §3.4.4.
+    block per §3.4.4. The host tier's bytes live in `backend` ("ram" |
+    "safs" | a StorageBackend instance; see module docstring).
     """
 
-    def __init__(self, device_budget_bytes: int = 1 << 62):
+    def __init__(self, device_budget_bytes: int = 1 << 62, *,
+                 backend="ram", backend_opts: dict | None = None):
+        from repro.safs.backend import make_backend  # late: avoids cycle
         self.device_budget = device_budget_bytes
         self.stats = IOStats()
+        self.backend = make_backend(backend, **(backend_opts or {}))
         self._entries: Dict[str, _Entry] = {}
         self._lru: list[str] = []   # oldest first
         self._pinned: set[str] = set()
+        self._recent_host_id: str | None = None  # page-cache pin (§3.4.4)
 
     # -- residency accounting -------------------------------------------------
     def device_bytes(self) -> int:
         return sum(e.nbytes for e in self._entries.values() if e.tier == DEVICE)
 
     def host_bytes(self) -> int:
-        return sum(e.nbytes for e in self._entries.values()
-                   if e.host_val is not None)
+        return sum(e.nbytes for e in self._entries.values() if e.has_host)
 
     def _touch(self, name: str) -> None:
         if name in self._lru:
@@ -97,13 +112,14 @@ class TieredStore:
         if tier == DEVICE:
             self._evict_for(nbytes)
             self._entries[name] = _Entry(data_id or name, DEVICE,
-                                         jnp.asarray(value), None, nbytes, True)
+                                         jnp.asarray(value), False, nbytes,
+                                         True)
         else:
-            host = np.asarray(value)
+            e = _Entry(data_id or name, HOST, None, True, nbytes, False)
+            self.backend.store(e.data_id, np.asarray(value))
             self.stats.host_bytes_written += nbytes
             self.stats.host_writes += 1
-            self._entries[name] = _Entry(data_id or name, HOST, None, host,
-                                         nbytes, False)
+            self._entries[name] = e
         self._touch(name)
 
     def get(self, name: str) -> jnp.ndarray:
@@ -116,7 +132,7 @@ class TieredStore:
         self.stats.cache_misses += 1
         self.stats.host_bytes_read += e.nbytes
         self.stats.host_reads += 1
-        return jnp.asarray(e.host_val)
+        return jnp.asarray(self.backend.load(e.data_id))
 
     def promote(self, name: str) -> jnp.ndarray:
         """Move to device tier (counted read if it was on host)."""
@@ -133,10 +149,17 @@ class TieredStore:
         e = self._entries[name]
         if e.tier == HOST:
             return
-        if e.dirty or e.host_val is None:
-            e.host_val = np.asarray(e.device_val)
+        if e.dirty or not e.has_host:
+            self.backend.store(e.data_id, np.asarray(e.device_val))
+            e.has_host = True
             self.stats.host_bytes_written += e.nbytes
             self.stats.host_writes += 1
+            # most-recent-block page-cache pin (§3.4.4): the block just
+            # demoted is the one reorthogonalization re-reads next
+            if self._recent_host_id is not None:
+                self.backend.unpin(self._recent_host_id)
+            self.backend.pin(e.data_id)
+            self._recent_host_id = e.data_id
         e.device_val, e.tier, e.dirty = None, HOST, False
 
     def pin(self, name: str) -> None:
@@ -148,16 +171,38 @@ class TieredStore:
         self._pinned.discard(name)
 
     def delete(self, name: str) -> None:
-        self._entries.pop(name, None)
+        e = self._entries.pop(name, None)
         if name in self._lru:
             self._lru.remove(name)
         self._pinned.discard(name)
+        if e is not None and not any(o.data_id == e.data_id
+                                     for o in self._entries.values()):
+            self.backend.delete(e.data_id)
+            if self._recent_host_id == e.data_id:
+                self.backend.unpin(e.data_id)
+                self._recent_host_id = None
 
     def names(self):
         return list(self._entries)
 
     def tier_of(self, name: str) -> str:
         return self._entries[name].tier
+
+    # -- streaming helpers ------------------------------------------------------
+    def prefetch(self, names: Iterable[str]) -> None:
+        """Hint the backend to stage host-tier entries' pages ahead of the
+        next grouped pass (async; a no-op on the ram backend)."""
+        ids = [self._entries[n].data_id for n in names
+               if n in self._entries and self._entries[n].tier == HOST]
+        if ids:
+            self.backend.prefetch(ids)
+
+    def flush(self) -> None:
+        """Force dirty host-tier pages down to the physical medium."""
+        self.backend.flush()
+
+    def close(self) -> None:
+        self.backend.close()
 
     def reset_stats(self) -> IOStats:
         old, self.stats = self.stats, IOStats()

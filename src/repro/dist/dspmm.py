@@ -137,45 +137,61 @@ def pack_compressed_panels(pc: np.ndarray, pr: np.ndarray, pv: np.ndarray,
     (R, M, e_pad), (R, M, 2·n_chunks), (R, M, e_pad); e_pad rounds e_loc up
     to a chunk multiple (padding repeats each panel's last edge, weight 0).
 
-    Size bound: chunk deltas must fit 16 bits, so a chunk's rows may span
-    at most 65536 panel rows and its columns 65536 panel columns. Panels
-    are (row, col)-sorted, so the row span of `chunk` consecutive edges is
-    small, but the column span of one dense row can reach the panel width
-    n_pad/M — paper-scale meshes need the panel grid dense enough
-    (R·M devices) that n_pad/M < 2^16, or a sub-tiled re-basing of the
-    stream (ROADMAP follow-up). Overflow raises rather than corrupting.
+    Size bound + sub-tile re-basing: sub-tile deltas must fit 16 bits, so a
+    sub-tile's rows may span at most 65536 panel rows and its columns 65536
+    panel columns. Panels are (row, col)-sorted, so the row span of `chunk`
+    consecutive edges is small, but the column span of one dense row can
+    reach the panel width n_pad/M, which exceeds 2^16 on sparse meshes.
+    When the requested chunk overflows, the chunk is re-based at sub-tile
+    granularity: each chunk splits into 2^k equal sub-tiles, each carrying
+    its own (row, col) base, with k the smallest power that fits every
+    delta (worst case sub-tile = 1 edge, which always fits). e_pad stays a
+    multiple of `chunk` — only the bases array grows. The stream is
+    self-describing: consumers recover the effective sub-tile length as
+    `2 * e_pad // bases.shape[-1]` (see `_unpack_edges`), so the packed
+    format needs no side channel.
     """
     import ml_dtypes
     r_groups, m_groups, e_loc = pc.shape
     e_pad = -(-e_loc // chunk) * chunk
-    n_chunks = e_pad // chunk
     if e_pad != e_loc:
         reps = e_pad - e_loc
         pc = np.concatenate([pc, np.repeat(pc[..., -1:], reps, -1)], -1)
         pr = np.concatenate([pr, np.repeat(pr[..., -1:], reps, -1)], -1)
         pv = np.concatenate([pv, np.zeros(pc.shape[:2] + (reps,),
                                           pv.dtype)], -1)
-    rc = pr.reshape(r_groups, m_groups, n_chunks, chunk)
-    cc = pc.reshape(r_groups, m_groups, n_chunks, chunk)
-    base_r = rc.min(-1)
-    base_c = cc.min(-1)
-    off_r = (rc - base_r[..., None]).astype(np.int64)
-    off_c = (cc - base_c[..., None]).astype(np.int64)
-    if off_r.size and max(off_r.max(), off_c.max()) > 0xFFFF:
-        raise ValueError("chunk endpoint delta exceeds 16 bits; "
-                         "shrink CHUNK or re-sort the panel")
+    sub = chunk
+    while True:
+        n_sub = e_pad // sub
+        rc = pr.reshape(r_groups, m_groups, n_sub, sub)
+        cc = pc.reshape(r_groups, m_groups, n_sub, sub)
+        base_r = rc.min(-1)
+        base_c = cc.min(-1)
+        off_r = (rc - base_r[..., None]).astype(np.int64)
+        off_c = (cc - base_c[..., None]).astype(np.int64)
+        if not off_r.size or max(off_r.max(), off_c.max()) <= 0xFFFF:
+            break
+        assert sub > 1, "1-edge sub-tile cannot overflow a 16-bit delta"
+        # re-base at finer sub-tile granularity; an odd sub drops straight
+        # to 1 so every sub in the sequence divides e_pad
+        sub = sub // 2 if sub % 2 == 0 else 1
     packed = ((off_r.astype(np.uint32) << np.uint32(16))
               | off_c.astype(np.uint32)).reshape(r_groups, m_groups, e_pad)
     bases = np.stack([base_r, base_c], axis=-1).reshape(
-        r_groups, m_groups, 2 * n_chunks).astype(np.int32)
+        r_groups, m_groups, 2 * n_sub).astype(np.int32)
     return packed, bases, pv.astype(ml_dtypes.bfloat16)
 
 
-def _unpack_edges(packed, bases, *, chunk: int):
-    """Inverse of pack_compressed_panels for one device's (e_pad,) stream."""
-    n_chunks = bases.shape[0] // 2
-    b2 = bases.reshape(n_chunks, 2)
-    off = packed.reshape(n_chunks, chunk)
+def _unpack_edges(packed, bases):
+    """Inverse of pack_compressed_panels for one device's (e_pad,) stream.
+
+    The sub-tile length is recovered from the array shapes (the stream is
+    self-describing), so sub-tiled re-based streams decode transparently.
+    """
+    n_sub = bases.shape[0] // 2
+    sub = packed.shape[0] // n_sub
+    b2 = bases.reshape(n_sub, 2)
+    off = packed.reshape(n_sub, sub)
     pr = (off >> np.uint32(16)).astype(jnp.int32) + b2[:, :1]
     pc = (off & _MASK16).astype(jnp.int32) + b2[:, 1:]
     return pr.reshape(-1), pc.reshape(-1)
@@ -284,14 +300,18 @@ def build_eigen_step_compressed(mesh, *, n_pad: int, e_loc: int, b: int,
 
     Returns (fn, n_chunks, e_pad); fn(packed, bases, vals_bf16,
     vstack_bf16, x_bf16) -> (q_new, h, r) in f32. Matches the baseline step
-    to bf16 input-rounding tolerance (accumulation stays f32).
+    to bf16 input-rounding tolerance (accumulation stays f32). `chunk` here
+    only sizes the declared shapes: if pack_compressed_panels re-based a
+    stream at a finer sub-tile (wide panels), pass the effective sub-tile
+    length `2 * e_pad // bases.shape[-1]` instead — the runtime unpack is
+    shape-driven either way.
     """
     e_pad = -(-e_loc // chunk) * chunk
     n_chunks = e_pad // chunk
     axes = tuple(mesh.axis_names)
 
     def local(packed, bases, pv, v_loc, x_loc):
-        pr, pc = _unpack_edges(packed[0, 0], bases[0, 0], chunk=chunk)
+        pr, pc = _unpack_edges(packed[0, 0], bases[0, 0])
         w = _panel_spmm(pc, pr, pv[0, 0], x_loc, mesh=mesh, n_pad=n_pad,
                         b=b)
         return _cgs2_cholqr2(w, v_loc, axes, b=b, nb_v=nb_v,

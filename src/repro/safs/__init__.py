@@ -1,0 +1,14 @@
+"""repro.safs — file-backed SAFS page store (paper §3.4.1–§3.4.4).
+
+See README.md in this directory for the paper mapping.
+"""
+from repro.safs.pagefile import PAGE_SIZE, CrashPoint, PageFile
+from repro.safs.cache import PageCache
+from repro.safs.prefetch import Prefetcher
+from repro.safs.backend import (RamBackend, SafsBackend, StorageBackend,
+                                make_backend)
+
+__all__ = [
+    "PAGE_SIZE", "CrashPoint", "PageFile", "PageCache", "Prefetcher",
+    "RamBackend", "SafsBackend", "StorageBackend", "make_backend",
+]

@@ -1,0 +1,245 @@
+"""Storage backends for the slow tier — `ram` (emulated) or `safs` (files).
+
+`TieredStore` owns *policy* (tier residency, LRU demotion, write-avoidance,
+logical byte accounting); a `StorageBackend` owns *mechanism* — where the
+slow-tier bytes physically live. Two implementations:
+
+  * `RamBackend` — numpy buffers in host memory: exactly the seed repo's
+    emulation, still the default for tier-1 tests (fast, no filesystem);
+  * `SafsBackend` — the paper's layer: one PageFile per data_id under a
+    root directory, fronted by a shared LRU `PageCache` with write-back and
+    most-recent-block pinning, and a `Prefetcher` that overlaps page reads
+    with compute. Its `stats` count *actual disk traffic* (endurance),
+    which is ≤ the logical tier traffic TieredStore counts whenever the
+    page cache absorbs re-reads — the paper's Table-3 gap, measurable.
+
+Select per store:  `TieredStore(backend="safs", backend_opts={"root": dir})`
+or pass a constructed backend instance (shared across stores if desired).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import urllib.parse
+from typing import Dict, Iterable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.tiered import IOStats
+from repro.safs.cache import PageCache
+from repro.safs.pagefile import PAGE_SIZE, PageFile
+from repro.safs.prefetch import Prefetcher
+
+
+@runtime_checkable
+class StorageBackend(Protocol):
+    """Mechanism interface for the slow tier (see module docstring)."""
+
+    stats: IOStats
+
+    def store(self, data_id: str, arr: np.ndarray) -> None: ...
+    def load(self, data_id: str) -> np.ndarray: ...
+    def delete(self, data_id: str) -> None: ...
+    def has(self, data_id: str) -> bool: ...
+    def pin(self, data_id: str) -> None: ...
+    def unpin(self, data_id: str) -> None: ...
+    def prefetch(self, data_ids: Iterable[str]) -> None: ...
+    def flush(self) -> None: ...
+    def close(self) -> None: ...
+
+
+# ---------------------------------------------------------------- ram
+class RamBackend:
+    """Host-DRAM slow tier — the seed emulation, byte-accounted."""
+
+    def __init__(self):
+        self.stats = IOStats()
+        self._bufs: Dict[str, np.ndarray] = {}
+
+    def store(self, data_id: str, arr: np.ndarray) -> None:
+        a = np.asarray(arr)
+        self._bufs[data_id] = a
+        self.stats.host_bytes_written += a.nbytes
+        self.stats.host_writes += 1
+
+    def load(self, data_id: str) -> np.ndarray:
+        a = self._bufs[data_id]
+        self.stats.host_bytes_read += a.nbytes
+        self.stats.host_reads += 1
+        return a
+
+    def delete(self, data_id: str) -> None:
+        self._bufs.pop(data_id, None)
+
+    def has(self, data_id: str) -> bool:
+        return data_id in self._bufs
+
+    def pin(self, data_id: str) -> None:        # no cache to pin in
+        pass
+
+    def unpin(self, data_id: str) -> None:
+        pass
+
+    def prefetch(self, data_ids) -> None:       # RAM is already "resident"
+        pass
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        self._bufs.clear()
+
+
+# ---------------------------------------------------------------- safs
+class SafsBackend:
+    """File-backed slow tier: PageFiles + shared page cache + prefetcher."""
+
+    def __init__(self, root: str, *, page_size: int = PAGE_SIZE,
+                 cache_bytes: int = 64 << 20, use_mmap: bool = False,
+                 enable_prefetch: bool = True):
+        self.root = root
+        self.page_size = int(page_size)
+        self.use_mmap = use_mmap
+        self.enable_prefetch = enable_prefetch
+        os.makedirs(root, exist_ok=True)
+        self._files: Dict[str, PageFile] = {}
+        self._lock = threading.RLock()
+        self.cache = PageCache(cache_bytes, self.page_size, self._writeback)
+        self.stats = self.cache.stats      # shared: byte-exact disk traffic
+        self.prefetcher = Prefetcher(self._fill)
+        self._reopen()
+
+    # ------------------------------------------------------------- naming
+    def _path(self, data_id: str) -> str:
+        return os.path.join(self.root,
+                            urllib.parse.quote(data_id, safe="") + ".pages")
+
+    def _unpath(self, fname: str) -> str:
+        return urllib.parse.unquote(fname[:-len(".pages")])
+
+    def _reopen(self) -> None:
+        """Adopt page files already in root (checkpoint-restore path)."""
+        for f in sorted(os.listdir(self.root)):
+            if f.endswith(".pages") and os.path.exists(
+                    os.path.join(self.root, f + ".meta")):
+                data_id = self._unpath(f)
+                self._files[data_id] = PageFile(
+                    os.path.join(self.root, f), use_mmap=self.use_mmap)
+
+    def pagefile(self, data_id: str) -> PageFile:
+        return self._files[data_id]
+
+    def data_ids(self):
+        with self._lock:
+            return list(self._files)
+
+    # ------------------------------------------------------------- plumbing
+    def _writeback(self, data_id: str, pages: Dict[int, bytes]) -> int:
+        return self._files[data_id].write_pages(pages)
+
+    def _fill(self, data_id: str) -> int:
+        """Read every non-resident page of data_id into the cache (clean).
+        Runs on the prefetch thread; pread keeps it safe vs the consumer."""
+        with self._lock:
+            pf = self._files.get(data_id)
+        if pf is None:
+            return 0
+        n = 0
+        for i in pf.page_indices():
+            if self.cache.peek(data_id, i):
+                continue
+            data = pf.read_page(i)
+            self.cache.fill_bytes_read(len(data))
+            n += len(data)
+            self.cache.put(data_id, i, data, dirty=False)
+        return n
+
+    # ------------------------------------------------------------- protocol
+    def store(self, data_id: str, arr: np.ndarray) -> None:
+        a = np.ascontiguousarray(arr)
+        with self._lock:
+            pf = self._files.get(data_id)
+            if pf is not None and (pf.shape != a.shape
+                                   or pf.dtype != a.dtype):
+                self.delete(data_id)
+                pf = None
+            if pf is None:
+                pf = PageFile(self._path(data_id), page_size=self.page_size,
+                              shape=a.shape, dtype=a.dtype.name,
+                              use_mmap=self.use_mmap)
+                self._files[data_id] = pf
+        for i, payload in pf.split(a).items():
+            self.cache.put(data_id, i, payload, dirty=True)
+
+    def load(self, data_id: str) -> np.ndarray:
+        self.prefetcher.wait(data_id)
+        with self._lock:
+            pf = self._files[data_id]
+        pages: Dict[int, bytes] = {}
+        for i in pf.page_indices():
+            data = self.cache.get(data_id, i)
+            if data is None:
+                data = pf.read_page(i)
+                self.cache.fill_bytes_read(len(data))
+                self.cache.put(data_id, i, data, dirty=False)
+            pages[i] = data
+        return pf.assemble(pages)
+
+    def delete(self, data_id: str) -> None:
+        with self._lock:
+            pf = self._files.pop(data_id, None)
+        self.cache.invalidate(data_id, drop_dirty=True)
+        if pf is not None:
+            pf.delete()
+
+    def has(self, data_id: str) -> bool:
+        with self._lock:
+            return data_id in self._files
+
+    def pin(self, data_id: str) -> None:
+        self.cache.pin(data_id)
+
+    def unpin(self, data_id: str) -> None:
+        self.cache.unpin(data_id)
+
+    def prefetch(self, data_ids) -> None:
+        if self.enable_prefetch:
+            self.prefetcher.schedule([d for d in data_ids if self.has(d)])
+
+    def flush(self, data_id: str | None = None) -> int:
+        """Write back all dirty pages (journaled per file) and fsync."""
+        n = self.cache.flush(data_id)
+        with self._lock:
+            files = ([self._files[data_id]] if data_id is not None
+                     else list(self._files.values()))
+        for pf in files:
+            pf.sync()
+        return n
+
+    def close(self) -> None:
+        self.flush()
+        self.prefetcher.close()
+        with self._lock:
+            for pf in self._files.values():
+                pf.close()
+            self._files.clear()
+
+
+def make_backend(spec, **opts) -> StorageBackend:
+    """Factory: 'ram', 'safs' (opts: root, page_size, cache_bytes,
+    use_mmap), or pass through an already-constructed backend."""
+    if not isinstance(spec, str):
+        return spec
+    if spec == "ram":
+        return RamBackend()
+    if spec == "safs":
+        if "root" not in opts:
+            import atexit
+            import shutil
+            import tempfile
+            opts["root"] = tempfile.mkdtemp(prefix="safs_")
+            # an auto-created root is ours to reclaim; long-lived processes
+            # creating many stores should pass `root` and call close()
+            atexit.register(shutil.rmtree, opts["root"], ignore_errors=True)
+        return SafsBackend(**opts)
+    raise ValueError(f"unknown storage backend {spec!r}")

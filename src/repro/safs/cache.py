@@ -1,0 +1,177 @@
+"""SAFS page cache — LRU over (data_id, page) with most-recent-block pinning.
+
+The paper's SAFS keeps a page cache in front of the SSD array and FlashEigen
+pins the most recent dense matrix in it (§3.4.4): the newest subspace block
+is about to be re-read by reorthogonalization, so evicting it would double
+the read traffic, and re-writing a clean page would burn write endurance.
+Both policies live here:
+
+  * keys are (data_id, page_index) — a transposed view shares its parent's
+    data_id (§3.4.4 "data identifiers"), so its pages hit the same lines;
+  * eviction is LRU over unpinned pages; a dirty page is written back to
+    its PageFile on eviction (write-back, not write-through — this is where
+    the 145 TB-read vs 4 TB-write asymmetry of Table 3 comes from);
+  * stats are byte-exact and mirror `core.tiered.IOStats` field names so
+    the two accounting layers compose: `host_bytes_read/written` count real
+    disk traffic (endurance), `cache_hits/misses` count page lookups.
+
+Thread safety: one lock around the table — the prefetch thread inserts
+pages while the consumer thread reads them.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.tiered import IOStats
+
+Key = Tuple[str, int]
+
+
+class _Line:
+    __slots__ = ("data", "dirty")
+
+    def __init__(self, data: bytes, dirty: bool):
+        self.data = data
+        self.dirty = dirty
+
+
+class PageCache:
+    """Byte-budgeted LRU page cache with per-data_id pinning.
+
+    `writer(data_id, {page: bytes}) -> bytes_written` is the write-back
+    sink (the owning backend flushes through its PageFile journal);
+    evictions of dirty pages call it one page at a time, explicit
+    `flush()` batches all dirty pages of a file into one journal commit.
+    """
+
+    def __init__(self, capacity_bytes: int, page_size: int,
+                 writer: Callable[[str, Dict[int, bytes]], int]):
+        self.capacity = int(capacity_bytes)
+        self.page_size = int(page_size)
+        self._writer = writer
+        self._lines: "OrderedDict[Key, _Line]" = OrderedDict()
+        self._pinned: set[str] = set()
+        self.stats = IOStats()
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------- sizing
+    def nbytes(self) -> int:
+        with self._lock:
+            return len(self._lines) * self.page_size
+
+    def n_pages(self) -> int:
+        return len(self._lines)
+
+    def _evict_for(self, incoming_pages: int) -> None:
+        # caller holds the lock
+        budget = self.capacity - incoming_pages * self.page_size
+        if len(self._lines) * self.page_size <= budget:
+            return
+        # Evict past the budget by a slack of ~capacity/8 (whole pages; 0 on
+        # tiny caches) and batch the dirty write-backs per file: a streaming
+        # store then pays one journal commit (with its fsyncs) per slack
+        # chunk instead of one per evicted page.
+        slack = (self.capacity // 8 // self.page_size) * self.page_size
+        target = max(0, budget - slack)
+        victims = []
+        for key in self._lines:                     # oldest first
+            if (len(self._lines) - len(victims)) * self.page_size <= target:
+                break
+            if key[0] not in self._pinned:
+                victims.append(key)
+        by_file: Dict[str, Dict[int, bytes]] = {}
+        for key in victims:
+            line = self._lines.pop(key)
+            if line.dirty:
+                by_file.setdefault(key[0], {})[key[1]] = line.data
+        for d, pages in by_file.items():
+            self.stats.host_bytes_written += self._writer(d, pages)
+            self.stats.host_writes += 1
+
+    # ------------------------------------------------------------ lookups
+    def get(self, data_id: str, page: int) -> Optional[bytes]:
+        """Hit → payload (LRU-touched); miss → None (caller reads disk)."""
+        with self._lock:
+            line = self._lines.get((data_id, page))
+            if line is None:
+                self.stats.cache_misses += 1
+                return None
+            self._lines.move_to_end((data_id, page))
+            self.stats.cache_hits += 1
+            return line.data
+
+    def peek(self, data_id: str, page: int) -> bool:
+        """Residency probe without touching LRU order or stats (prefetch)."""
+        with self._lock:
+            return (data_id, page) in self._lines
+
+    def put(self, data_id: str, page: int, data: bytes, *,
+            dirty: bool) -> None:
+        """Insert/overwrite a line. dirty=False for fill-on-read/prefetch,
+        dirty=True for stores (write-back deferred to eviction/flush)."""
+        with self._lock:
+            key = (data_id, page)
+            if key not in self._lines:
+                self._evict_for(1)
+                self._lines[key] = _Line(data, dirty)
+            else:
+                line = self._lines[key]
+                if dirty:
+                    line.data = data
+                    line.dirty = True
+                # a clean fill never clobbers a resident line: the line may
+                # hold newer dirty bytes than the disk copy the (prefetch)
+                # filler read between its peek and this put
+            self._lines.move_to_end(key)
+
+    # ------------------------------------------------------------ pinning
+    def pin(self, data_id: str) -> None:
+        with self._lock:
+            self._pinned.add(data_id)
+
+    def unpin(self, data_id: str) -> None:
+        with self._lock:
+            self._pinned.discard(data_id)
+
+    def pinned(self) -> set:
+        with self._lock:
+            return set(self._pinned)
+
+    # ------------------------------------------------------- flush/forget
+    def flush(self, data_id: str | None = None) -> int:
+        """Write back dirty pages (all files, or one), batched per file so
+        each file gets a single journal commit. Returns bytes written."""
+        with self._lock:
+            by_file: Dict[str, Dict[int, bytes]] = {}
+            for (d, p), line in self._lines.items():
+                if line.dirty and (data_id is None or d == data_id):
+                    by_file.setdefault(d, {})[p] = line.data
+            total = 0
+            for d, pages in by_file.items():
+                total += self._writer(d, pages)
+                self.stats.host_writes += 1
+                for p in pages:
+                    self._lines[(d, p)].dirty = False
+            self.stats.host_bytes_written += total
+            return total
+
+    def invalidate(self, data_id: str, *, drop_dirty: bool = False) -> None:
+        """Forget a file's pages (on delete). Dirty pages are dropped only
+        when drop_dirty (the file itself is going away)."""
+        with self._lock:
+            for key in [k for k in self._lines if k[0] == data_id]:
+                line = self._lines[key]
+                if line.dirty and not drop_dirty:
+                    self.stats.host_bytes_written += self._writer(
+                        data_id, {key[1]: line.data})
+                    self.stats.host_writes += 1
+                del self._lines[key]
+            self._pinned.discard(data_id)
+
+    def fill_bytes_read(self, n: int) -> None:
+        """Account a disk read that filled this cache (backend helper)."""
+        with self._lock:
+            self.stats.host_bytes_read += n
+            self.stats.host_reads += 1

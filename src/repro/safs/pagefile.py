@@ -1,0 +1,214 @@
+"""PageFile — one on-disk file per TAS matrix, split into fixed-size pages.
+
+The paper stores the vector subspace on SSDs behind SAFS, one file per
+dense (TAS) matrix (§3.4.1); SAFS moves data in pages and the eigensolver
+never overwrites a page it could instead avoid writing (write endurance,
+Table 3). This module is the byte level of our reproduction of that layer:
+
+  * a file is an array of PAGE_SIZE-byte pages, page i at offset
+    i * page_size; reads go through pread (positional, thread-safe — the
+    prefetcher reads concurrently with the consumer) or an optional mmap;
+  * dirty-page write-back is crash consistent via a per-file journal:
+    a flush first writes every dirty page plus a checksum to
+    `<file>.journal`, fsyncs, appends a commit trailer, and only then
+    patches the main file in place. Reopening after a crash replays a
+    committed journal (redo) or discards an uncommitted one, so every
+    page is always either entirely-old or entirely-new — never torn;
+  * shape/dtype metadata lives in a `<file>.meta` JSON sidecar so a page
+    store can be reopened cold (checkpoint restore path).
+
+Tests inject crashes with the `crash_after_pages` / `crash_in_journal`
+hooks instead of killing the process; the on-disk states they produce are
+exactly the ones a mid-flush kill leaves behind.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+PAGE_SIZE = 4096                       # SAFS default page size (§3.4.1)
+
+_JOURNAL_MAGIC = b"SAFSJRNL"
+_COMMIT = b"COMMITTD"
+_HDR = struct.Struct("<qII")           # page_index, crc32, payload_len
+
+
+class CrashPoint(RuntimeError):
+    """Raised by the test-only crash hooks to simulate a mid-flush kill."""
+
+
+def _meta_path(path: str) -> str:
+    return path + ".meta"
+
+
+def _journal_path(path: str) -> str:
+    return path + ".journal"
+
+
+class PageFile:
+    """Fixed-size-page file with journaled, crash-consistent write-back.
+
+    `shape`/`dtype` describe the logical array the pages back; they are
+    persisted to the sidecar on create and recovered on reopen.
+    """
+
+    def __init__(self, path: str, *, page_size: int = PAGE_SIZE,
+                 shape: tuple | None = None, dtype: str = "float32",
+                 use_mmap: bool = False):
+        self.path = path
+        self.page_size = int(page_size)
+        self.use_mmap = use_mmap
+        self._mmap = None
+        meta = _meta_path(path)
+        if os.path.exists(meta):
+            with open(meta) as f:
+                m = json.load(f)
+            self.page_size = int(m["page_size"])
+            self.shape = tuple(m["shape"])
+            self.dtype = np.dtype(m["dtype"])
+        else:
+            if shape is None:
+                raise FileNotFoundError(f"no page file metadata at {meta}")
+            self.shape = tuple(int(s) for s in shape)
+            self.dtype = np.dtype(dtype)
+            with open(meta, "w") as f:
+                json.dump({"page_size": self.page_size,
+                           "shape": list(self.shape),
+                           "dtype": self.dtype.name}, f)
+        self.nbytes = int(np.prod(self.shape)) * self.dtype.itemsize
+        self.n_pages = max(1, -(-self.nbytes // self.page_size))
+        flags = os.O_RDWR | os.O_CREAT
+        self._fd = os.open(path, flags, 0o644)
+        size = self.n_pages * self.page_size
+        if os.fstat(self._fd).st_size < size:
+            os.ftruncate(self._fd, size)
+        self._recover()
+
+    # ------------------------------------------------------------- raw I/O
+    def read_page(self, i: int) -> bytes:
+        """Positional page read (pread — safe from the prefetch thread)."""
+        assert 0 <= i < self.n_pages, (i, self.n_pages)
+        if self.use_mmap:
+            if self._mmap is None:
+                import mmap
+                self._mmap = mmap.mmap(self._fd, self.n_pages * self.page_size)
+            off = i * self.page_size
+            return bytes(self._mmap[off:off + self.page_size])
+        return os.pread(self._fd, self.page_size, i * self.page_size)
+
+    def _write_page_raw(self, i: int, data: bytes) -> None:
+        assert len(data) == self.page_size
+        if self._mmap is not None:
+            off = i * self.page_size
+            self._mmap[off:off + self.page_size] = data
+        else:
+            os.pwrite(self._fd, data, i * self.page_size)
+
+    # --------------------------------------------------- journaled flush
+    def write_pages(self, pages: Dict[int, bytes], *,
+                    crash_after_pages: Optional[int] = None,
+                    crash_in_journal: bool = False) -> int:
+        """Crash-consistent write-back of a batch of dirty pages.
+
+        Returns the number of bytes written to the main file (the
+        endurance-relevant count; journal bytes are transient). The two
+        crash hooks abort, respectively, after `crash_after_pages` in-place
+        page writes (journal already committed → redo on reopen) and
+        mid-journal before the commit trailer (→ discard on reopen).
+        """
+        if not pages:
+            return 0
+        jp = _journal_path(self.path)
+        with open(jp, "wb") as j:
+            j.write(_JOURNAL_MAGIC)
+            for k, (i, data) in enumerate(sorted(pages.items())):
+                assert len(data) == self.page_size
+                j.write(_HDR.pack(i, zlib.crc32(data), len(data)))
+                j.write(data)
+                if crash_in_journal and k + 1 == len(pages):
+                    j.flush()
+                    os.fsync(j.fileno())
+                    raise CrashPoint("crash before journal commit")
+            j.flush()
+            os.fsync(j.fileno())
+            j.write(_COMMIT)
+            j.flush()
+            os.fsync(j.fileno())
+        written = 0
+        for k, (i, data) in enumerate(sorted(pages.items())):
+            if crash_after_pages is not None and k >= crash_after_pages:
+                raise CrashPoint(f"crash after {k} in-place page writes")
+            self._write_page_raw(i, data)
+            written += len(data)
+        self.sync()
+        os.unlink(jp)
+        return written
+
+    def _recover(self) -> None:
+        """Replay a committed journal; discard an uncommitted one."""
+        jp = _journal_path(self.path)
+        if not os.path.exists(jp):
+            return
+        with open(jp, "rb") as j:
+            blob = j.read()
+        ok = blob.startswith(_JOURNAL_MAGIC) and blob.endswith(_COMMIT)
+        if ok:
+            off = len(_JOURNAL_MAGIC)
+            end = len(blob) - len(_COMMIT)
+            while off < end:
+                i, crc, n = _HDR.unpack_from(blob, off)
+                off += _HDR.size
+                data = blob[off:off + n]
+                off += n
+                if zlib.crc32(data) != crc:   # torn journal: abort replay
+                    ok = False
+                    break
+                self._write_page_raw(i, data)
+            self.sync()
+        os.unlink(jp)
+
+    def sync(self) -> None:
+        if self._mmap is not None:
+            self._mmap.flush()
+        os.fsync(self._fd)
+
+    # --------------------------------------------------------- array view
+    def page_indices(self) -> Iterable[int]:
+        return range(self.n_pages)
+
+    def pages_of_slice(self, byte_lo: int, byte_hi: int) -> range:
+        """Pages overlapping the byte range [lo, hi) of the logical array."""
+        return range(byte_lo // self.page_size,
+                     -(-byte_hi // self.page_size))
+
+    def assemble(self, pages: Dict[int, bytes]) -> np.ndarray:
+        """Rebuild the logical array from a full set of page payloads."""
+        buf = b"".join(pages[i] for i in range(self.n_pages))
+        return np.frombuffer(buf[:self.nbytes],
+                             dtype=self.dtype).reshape(self.shape).copy()
+
+    def split(self, arr: np.ndarray) -> Dict[int, bytes]:
+        """Split the logical array into zero-padded page payloads."""
+        raw = np.ascontiguousarray(arr, dtype=self.dtype).tobytes()
+        raw += b"\0" * (self.n_pages * self.page_size - len(raw))
+        return {i: raw[i * self.page_size:(i + 1) * self.page_size]
+                for i in range(self.n_pages)}
+
+    def close(self) -> None:
+        if self._mmap is not None:
+            self._mmap.close()
+            self._mmap = None
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def delete(self) -> None:
+        self.close()
+        for p in (self.path, _meta_path(self.path), _journal_path(self.path)):
+            if os.path.exists(p):
+                os.unlink(p)

@@ -1,0 +1,115 @@
+"""Async prefetcher — overlap SSD page reads with JAX compute.
+
+FlashGraph's contribution (and this paper's §3.4.2/§3.4.3) is that SEM
+performance lives or dies on overlapping disk with compute: while the
+eigensolver contracts one group of subspace blocks, SAFS should already be
+streaming the *next* group's pages. This module is that double buffer:
+
+  * `schedule(data_ids)` enqueues whole-file page reads on a daemon worker
+    thread; the worker fills the shared PageCache with clean lines (it
+    never dirties pages — prefetch is read-only);
+  * the consumer calls `wait(data_id)` (the backend does, inside `load`)
+    before using a file; time the consumer actually blocks there is the
+    *un*-overlapped remainder;
+  * overlap accounting: `overlap_seconds() = busy_seconds - wait_seconds`,
+    the disk time hidden behind compute — `bench_safs.py` reports it and
+    the acceptance bar is that it is nonzero.
+
+One worker is enough: a single NVMe stream already saturates the emulated
+tier, and the paper's prefetcher likewise issues from one dispatch thread
+per file (§3.4.2).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+
+class Prefetcher:
+    """Single-worker async page reader over a shared PageCache.
+
+    `reader(data_id) -> int` performs the actual cache fill for one file
+    and returns bytes read from disk (the backend provides it; it skips
+    pages already resident).
+    """
+
+    def __init__(self, reader: Callable[[str], int]):
+        self._reader = reader
+        self._q: "queue.Queue[Optional[str]]" = queue.Queue()
+        self._done: Dict[str, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.busy_seconds = 0.0
+        self.wait_seconds = 0.0
+        self.bytes_prefetched = 0
+        self.files_prefetched = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------- worker
+    def _run(self) -> None:
+        while True:
+            data_id = self._q.get()
+            if data_id is None:
+                return
+            with self._lock:
+                ev = self._done.get(data_id)
+            t0 = time.perf_counter()
+            try:
+                n = self._reader(data_id)
+                with self._lock:
+                    self.bytes_prefetched += n
+                    self.files_prefetched += 1
+            except Exception:      # a failed prefetch is only a lost overlap
+                pass
+            finally:
+                with self._lock:
+                    self.busy_seconds += time.perf_counter() - t0
+                if ev is not None:
+                    ev.set()
+
+    # ----------------------------------------------------------- frontend
+    def schedule(self, data_ids) -> None:
+        """Enqueue background reads; ignores ids already in flight."""
+        for d in data_ids:
+            with self._lock:
+                if d in self._done and not self._done[d].is_set():
+                    continue
+                self._done[d] = threading.Event()
+            self._q.put(d)
+
+    def wait(self, data_id: str) -> float:
+        """Block until an in-flight prefetch of data_id completes (no-op if
+        never scheduled). Returns (and accounts) the seconds blocked."""
+        with self._lock:
+            ev = self._done.get(data_id)
+        if ev is None:
+            return 0.0
+        t0 = time.perf_counter()
+        ev.wait()
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.wait_seconds += dt
+            self._done.pop(data_id, None)
+        return dt
+
+    def drain(self) -> None:
+        """Wait for everything in flight (benchmark epilogue)."""
+        for d in list(self._done):
+            self.wait(d)
+
+    def overlap_seconds(self) -> float:
+        """Disk-read time hidden behind foreground compute."""
+        return max(0.0, self.busy_seconds - self.wait_seconds)
+
+    def stats(self) -> dict:
+        return {"busy_seconds": self.busy_seconds,
+                "wait_seconds": self.wait_seconds,
+                "overlap_seconds": self.overlap_seconds(),
+                "bytes_prefetched": self.bytes_prefetched,
+                "files_prefetched": self.files_prefetched}
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=5)

@@ -41,7 +41,40 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     collect_ignore = ["test_ft.py", "test_ortho.py", "test_partition.py",
-                      "test_tiles.py"]
+                      "test_tiles.py", "test_safs_props.py"]
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "disk: filesystem-touching test (SAFS page files); run in a bounded "
+        "TMPDIR via scripts/run_tier1.sh and size-guarded by disk_tmp")
+
+
+# Per-test byte budget for SAFS page files — a runaway page store should
+# fail its own test, not fill the build box's disk.
+DISK_TMP_BUDGET = 64 << 20
+
+
+def _tree_bytes(root: str) -> int:
+    total = 0
+    for dirpath, _, files in os.walk(root):
+        for f in files:
+            try:
+                total += os.path.getsize(os.path.join(dirpath, f))
+            except OSError:
+                pass
+    return total
+
+
+@pytest.fixture
+def disk_tmp(tmp_path):
+    """tmp dir for pytest.mark.disk tests with a teardown size guard."""
+    yield str(tmp_path)
+    used = _tree_bytes(str(tmp_path))
+    assert used <= DISK_TMP_BUDGET, (
+        f"disk test left {used/1e6:.1f} MB in {tmp_path} "
+        f"(budget {DISK_TMP_BUDGET/1e6:.0f} MB)")
 
 
 @pytest.fixture(scope="session")

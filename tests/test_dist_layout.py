@@ -120,6 +120,78 @@ def test_pack_compressed_roundtrip():
     assert CHUNK % 2 == 0  # dryrun sizes streams against the real CHUNK
 
 
+def _unpack_np(packed, bases):
+    """Shape-driven numpy unpack (mirrors dspmm._unpack_edges)."""
+    n_sub = bases.shape[-1] // 2
+    sub = packed.shape[-1] // n_sub
+    b2 = bases.reshape(n_sub, 2)
+    off = packed.reshape(n_sub, sub)
+    rr = (off >> 16).astype(np.int64) + b2[:, :1]
+    cc = (off & 0xFFFF).astype(np.int64) + b2[:, 1:]
+    return rr.reshape(-1), cc.reshape(-1)
+
+
+def test_pack_compressed_subtile_rebasing_at_16bit_boundary():
+    """Regression for the ROADMAP follow-up: when one chunk's column span
+    exceeds 2^16 (panel width n_pad/M > 65536 — one dense row sweeps the
+    whole panel), the stream must re-base at sub-tile granularity instead
+    of raising, and still round-trip exactly."""
+    chunk = 64
+    # one panel, one source row fanning out across a 200k-wide panel:
+    # column deltas within any 64-edge chunk reach ~99k > 0xFFFF
+    e = 2 * chunk
+    pr = np.zeros((1, 1, e), np.int32)
+    pc = np.zeros((1, 1, e), np.int32)
+    pc[0, 0] = np.linspace(0, 200_000, e).astype(np.int32)
+    pv = np.ones((1, 1, e), np.float32)
+    packed, bases, valsb = pack_compressed_panels(pc, pr, pv, chunk=chunk)
+    assert packed.shape[-1] == e            # e_pad stays a chunk multiple
+    n_sub = bases.shape[-1] // 2
+    sub = packed.shape[-1] // n_sub
+    assert sub < chunk and packed.shape[-1] % sub == 0  # re-based finer
+    rr, cc = _unpack_np(packed[0, 0], bases[0, 0])
+    np.testing.assert_array_equal(rr, pr[0, 0])
+    np.testing.assert_array_equal(cc, pc[0, 0])
+
+    # boundary case: span of exactly 0xFFFF must NOT trigger re-basing
+    pc2 = np.zeros((1, 1, chunk), np.int32)
+    pc2[0, 0, -1] = 0xFFFF
+    packed2, bases2, _ = pack_compressed_panels(
+        pc2, np.zeros_like(pc2), np.ones((1, 1, chunk), np.float32),
+        chunk=chunk)
+    assert bases2.shape[-1] == 2            # single chunk, single base
+    rr2, cc2 = _unpack_np(packed2[0, 0], bases2[0, 0])
+    np.testing.assert_array_equal(cc2, pc2[0, 0])
+
+    # one past the boundary: a half/half split needs exactly one halving
+    # (each chunk/2 sub-tile then spans 0 around its own base)
+    pc3 = np.zeros((1, 1, chunk), np.int32)
+    pc3[0, 0, chunk // 2:] = 0x10000
+    packed3, bases3, _ = pack_compressed_panels(
+        pc3, np.zeros_like(pc3), np.ones((1, 1, chunk), np.float32),
+        chunk=chunk)
+    assert bases3.shape[-1] == 4            # 2 sub-tiles of chunk/2
+    rr3, cc3 = _unpack_np(packed3[0, 0], bases3[0, 0])
+    np.testing.assert_array_equal(cc3, pc3[0, 0])
+
+
+def test_pack_compressed_subtile_stream_drives_eigen_step():
+    """A re-based stream must decode identically through the jit'd unpack
+    path (shape-driven sub-tile recovery — no side channel)."""
+    import jax
+    from repro.dist.dspmm import _unpack_edges
+    chunk = 32
+    e = 3 * chunk
+    pr = np.random.default_rng(0).integers(0, 50, (1, 1, e)).astype(np.int32)
+    pc = np.sort(np.random.default_rng(1)
+                 .integers(0, 200_000, (1, 1, e)).astype(np.int32))
+    pv = np.ones((1, 1, e), np.float32)
+    packed, bases, _ = pack_compressed_panels(pc, pr, pv, chunk=chunk)
+    rr, cc = jax.jit(_unpack_edges)(packed[0, 0], bases[0, 0])
+    np.testing.assert_array_equal(np.asarray(rr), pr[0, 0])
+    np.testing.assert_array_equal(np.asarray(cc), pc[0, 0])
+
+
 def test_panel_blocksparse_bridge_matches_scatter():
     """One packed panel driven through kernels/spmm_tile.py (interpret
     mode) agrees with the dense reference — pins the panel format to the

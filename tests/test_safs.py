@@ -1,0 +1,311 @@
+"""repro.safs — page store, cache, crash consistency, backend equivalence.
+
+Everything filesystem-touching is `@pytest.mark.disk` and runs inside the
+size-guarded `disk_tmp` fixture (conftest): scripts/run_tier1.sh re-runs
+this subset in a bounded TMPDIR.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MultiVector, TieredStore, DEVICE, HOST
+from repro.safs import CrashPoint, PageCache, PageFile, SafsBackend
+from repro.ckpt import checkpoint as ck
+
+pytestmark = pytest.mark.disk
+
+
+# ------------------------------------------------------------------ pagefile
+def test_pagefile_roundtrip_and_cold_reopen(disk_tmp):
+    path = os.path.join(disk_tmp, "a.pages")
+    arr = np.arange(5000, dtype=np.float32).reshape(100, 50)
+    pf = PageFile(path, page_size=4096, shape=arr.shape, dtype="float32")
+    pf.write_pages(pf.split(arr))
+    np.testing.assert_array_equal(pf.assemble(
+        {i: pf.read_page(i) for i in pf.page_indices()}), arr)
+    pf.close()
+    # cold reopen recovers shape/dtype from the sidecar
+    pf2 = PageFile(path)
+    assert pf2.shape == (100, 50) and pf2.dtype == np.float32
+    np.testing.assert_array_equal(pf2.assemble(
+        {i: pf2.read_page(i) for i in pf2.page_indices()}), arr)
+    pf2.delete()
+    assert not os.path.exists(path)
+
+
+def test_crash_after_journal_commit_redoes_on_reopen(disk_tmp):
+    """Kill mid-flush AFTER the journal committed: reopening must replay
+    the journal, so every page shows the NEW contents."""
+    path = os.path.join(disk_tmp, "c.pages")
+    old = np.zeros((64, 64), np.float32)
+    new = np.full((64, 64), 7.0, np.float32)
+    pf = PageFile(path, page_size=4096, shape=old.shape, dtype="float32")
+    pf.write_pages(pf.split(old))
+    with pytest.raises(CrashPoint):
+        pf.write_pages(pf.split(new), crash_after_pages=1)  # died mid-patch
+    pf.close()
+    pf2 = PageFile(path)   # recovery replays the committed journal
+    got = pf2.assemble({i: pf2.read_page(i) for i in pf2.page_indices()})
+    np.testing.assert_array_equal(got, new)
+    assert not os.path.exists(path + ".journal")
+    pf2.close()
+
+
+def test_crash_before_journal_commit_keeps_old_pages(disk_tmp):
+    """Kill mid-flush BEFORE the commit trailer: the uncommitted journal is
+    discarded and every page shows the OLD contents (no torn pages)."""
+    path = os.path.join(disk_tmp, "d.pages")
+    old = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    new = old + 100.0
+    pf = PageFile(path, page_size=4096, shape=old.shape, dtype="float32")
+    pf.write_pages(pf.split(old))
+    with pytest.raises(CrashPoint):
+        pf.write_pages(pf.split(new), crash_in_journal=True)
+    pf.close()
+    pf2 = PageFile(path)
+    got = pf2.assemble({i: pf2.read_page(i) for i in pf2.page_indices()})
+    np.testing.assert_array_equal(got, old)
+    assert not os.path.exists(path + ".journal")
+    pf2.close()
+
+
+# --------------------------------------------------------------- page cache
+def _cache(capacity_pages=4, page_size=64):
+    written = []
+
+    def writer(data_id, pages):
+        written.append((data_id, dict(pages)))
+        return len(pages) * page_size
+
+    return PageCache(capacity_pages * page_size, page_size, writer), written
+
+
+def test_cache_lru_eviction_and_dirty_writeback():
+    c, written = _cache(capacity_pages=2)
+    c.put("a", 0, b"x" * 64, dirty=True)
+    c.put("a", 1, b"y" * 64, dirty=False)
+    c.put("b", 0, b"z" * 64, dirty=True)      # evicts ("a",0) → write-back
+    assert written == [("a", {0: b"x" * 64})]
+    assert c.get("a", 0) is None              # miss: evicted
+    assert c.get("b", 0) == b"z" * 64         # hit
+    assert c.stats.host_bytes_written == 64
+    # clean eviction writes nothing (write-avoidance / endurance)
+    c.put("b", 1, b"w" * 64, dirty=False)     # evicts clean ("a",1)
+    assert len(written) == 1
+
+
+def test_cache_pinning_protects_recent_block():
+    c, written = _cache(capacity_pages=2)
+    c.put("recent", 0, b"r" * 64, dirty=True)
+    c.pin("recent")
+    c.put("other", 0, b"o" * 64, dirty=False)
+    c.put("other", 1, b"p" * 64, dirty=False)  # pressure: must skip pinned
+    assert c.peek("recent", 0)                 # survived (no LRU touch)
+    c.unpin("recent")
+    c.put("other", 2, b"q" * 64, dirty=False)  # now evictable → write-back
+    assert written and written[0][0] == "recent"
+
+
+def test_cache_flush_batches_per_file():
+    c, written = _cache(capacity_pages=8)
+    for i in range(3):
+        c.put("f", i, bytes([i]) * 64, dirty=True)
+    n = c.flush()
+    assert n == 3 * 64
+    assert written == [("f", {0: b"\0" * 64, 1: b"\1" * 64, 2: b"\2" * 64})]
+    assert c.flush() == 0                      # idempotent: now clean
+
+
+# ----------------------------------------------------- backend equivalence
+def _twin_mvs(disk_tmp, n=384, widths=(4, 4, 2), seed=0, cache_pages=2):
+    """Identical MultiVectors on ram and safs stores (+ the dense oracle)."""
+    rng = np.random.default_rng(seed)
+    blocks = [rng.standard_normal((n, w)).astype(np.float32)
+              for w in widths]
+    ram = MultiVector(TieredStore(), n, group_size=2, impl="ref")
+    safs = MultiVector(
+        TieredStore(backend="safs",
+                    backend_opts={"root": os.path.join(disk_tmp, "pages"),
+                                  "cache_bytes": cache_pages * 4096}),
+        n, group_size=2, impl="ref")
+    for b in blocks:
+        ram.append_block(jnp.asarray(b))
+        safs.append_block(jnp.asarray(b))
+    return ram, safs, np.concatenate(blocks, axis=1)
+
+
+def test_backend_equivalence_all_eleven_ops(disk_tmp):
+    """The eleven Table-1 MultiVector ops agree byte-for-byte between the
+    ram emulation and the file-backed safs store (tiny page cache, so the
+    safs side genuinely round-trips the filesystem)."""
+    rng = np.random.default_rng(3)
+    ram, safs, dense = _twin_mvs(disk_tmp)
+    n, m = dense.shape
+    small = jnp.asarray(rng.standard_normal((m, 3)), jnp.float32)
+    other = jnp.asarray(rng.standard_normal((n, 5)), jnp.float32)
+    diag = jnp.asarray(rng.standard_normal(m), jnp.float32)
+
+    def both(f):
+        a, b = np.asarray(f(ram)), np.asarray(f(safs))
+        np.testing.assert_array_equal(a, b)
+        return a
+
+    # 1 MvTimesMatAddMv  2 MvTransMv  3 MvDot  4 MvNorm  5 CloneView
+    both(lambda mv: mv.mv_times_mat(small))
+    both(lambda mv: mv.mv_trans_mv(other, alpha=1.5))
+    other_mv_r, other_mv_s, _ = _twin_mvs(disk_tmp, n=n, widths=(4, 4, 2),
+                                          seed=7)
+    np.testing.assert_array_equal(np.asarray(ram.mv_dot(other_mv_r)),
+                                  np.asarray(safs.mv_dot(other_mv_s)))
+    both(lambda mv: mv.mv_norm())
+    both(lambda mv: mv.clone_view([0, 3, 9]))
+    # 6 ConvLayout
+    both(lambda mv: mv.conv_layout())
+    # 7 MvScale (lazy) + 8 MvScale-diag (materializing)
+    ram.mv_scale(0.5), safs.mv_scale(0.5)
+    ram.mv_scale_diag(diag), safs.mv_scale_diag(diag)
+    both(lambda mv: mv.to_dense())
+    # 9 MvAddMv
+    np.testing.assert_array_equal(
+        np.asarray(ram.mv_add_mv(2.0, other_mv_r, -1.0).to_dense()),
+        np.asarray(safs.mv_add_mv(2.0, other_mv_s, -1.0).to_dense()))
+    # 10 SetBlock
+    blk = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+    ram.set_block(1, blk), safs.set_block(1, blk)
+    both(lambda mv: mv.to_dense())
+    # 11 MvRandom (same key → same blocks on both backends)
+    key = jax.random.PRNGKey(11)
+    ram.mv_random(key, [4, 4]), safs.mv_random(key, [4, 4])
+    both(lambda mv: mv.to_dense())
+    # restart compression (the big out-of-core GEMM) rides on ops 1
+    q = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ram.compress(q, [4]).to_dense()),
+        np.asarray(safs.compress(q, [4]).to_dense()))
+    # the safs side actually touched the medium
+    assert safs.store.backend.stats.host_bytes_read > 0
+    safs.store.close()
+
+
+def test_safs_streams_from_disk_under_tiny_cache(disk_tmp):
+    """Cache smaller than one block: every grouped pass re-reads pages from
+    the file, and the result still matches the dense oracle."""
+    rng = np.random.default_rng(5)
+    n, widths = 512, (4, 4, 4, 4)
+    store = TieredStore(
+        device_budget_bytes=2 * n * 4 * 4, backend="safs",
+        backend_opts={"root": os.path.join(disk_tmp, "p"),
+                      "cache_bytes": 2 * 4096})
+    mv = MultiVector(store, n, group_size=2, impl="ref")
+    blocks = [rng.standard_normal((n, w)).astype(np.float32) for w in widths]
+    for b in blocks:
+        mv.append_block(jnp.asarray(b))
+    dense = np.concatenate(blocks, axis=1)
+    small = rng.standard_normal((16, 3)).astype(np.float32)
+    out = np.asarray(mv.mv_times_mat(jnp.asarray(small)))
+    np.testing.assert_allclose(out, dense @ small, rtol=1e-5, atol=1e-5)
+    d = store.backend.stats
+    assert d.host_bytes_read > 0 and d.host_bytes_written > 0
+    store.close()
+
+
+def test_tier_semantics_identical_across_backends(disk_tmp):
+    """Pin/demote/write-avoidance logic is backend-independent."""
+    store = TieredStore(backend="safs",
+                        backend_opts={"root": os.path.join(disk_tmp, "t")})
+    store.put("x", jnp.ones((64, 4)))
+    store.demote("x")
+    assert store.tier_of("x") == HOST
+    w1 = store.stats.host_bytes_written
+    store.promote("x")
+    assert store.tier_of("x") == DEVICE
+    store.demote("x")     # not dirty — must not write again
+    assert store.stats.host_bytes_written == w1
+    np.testing.assert_array_equal(np.asarray(store.get("x")),
+                                  np.ones((64, 4), np.float32))
+    store.close()
+
+
+# ----------------------------------------------------------------- prefetch
+def test_prefetch_staging_is_correct_and_counted(disk_tmp):
+    store = TieredStore(backend="safs",
+                        backend_opts={"root": os.path.join(disk_tmp, "pf"),
+                                      "cache_bytes": 1 << 20})
+    arrs = {f"v{i}": np.random.default_rng(i).standard_normal(
+        (256, 4)).astype(np.float32) for i in range(4)}
+    for k, a in arrs.items():
+        store.put(k, jnp.asarray(a), tier=HOST)
+    store.flush()
+    store.prefetch(list(arrs))
+    store.backend.prefetcher.drain()
+    assert store.backend.prefetcher.stats()["files_prefetched"] >= 1
+    for k, a in arrs.items():
+        np.testing.assert_array_equal(np.asarray(store.get(k)), a)
+    store.close()
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_direct_from_pages_roundtrip(disk_tmp):
+    """save_safs snapshots the page files themselves; restore_safs reopens
+    them with contents intact — no array ever assembled for the copy."""
+    root = os.path.join(disk_tmp, "live")
+    store = TieredStore(backend="safs", backend_opts={"root": root})
+    a = np.random.default_rng(9).standard_normal((300, 4)).astype(np.float32)
+    b = np.random.default_rng(10).standard_normal((300, 2)).astype(np.float32)
+    d = np.random.default_rng(11).standard_normal((300, 4)).astype(np.float32)
+    store.put("mv/b0", jnp.asarray(a), tier=HOST)
+    store.put("mv/b1", jnp.asarray(b), tier=HOST)
+    # device-tier, never demoted (the pinned newest block of §3.4.4): the
+    # snapshot must write it through rather than silently drop it
+    store.put("mv/b2", jnp.asarray(d))
+    store.pin("mv/b2")
+    path = ck.save_safs(os.path.join(disk_tmp, "ck"), 7, store,
+                        extra={"nev": 8})
+    assert os.path.basename(path) == "step_0000000007"
+    assert store.tier_of("mv/b2") == DEVICE      # residency unchanged
+    backend, extra = ck.restore_safs(os.path.join(disk_tmp, "ck"), 7,
+                                     os.path.join(disk_tmp, "restored"))
+    assert extra == {"nev": 8}
+    assert sorted(backend.data_ids()) == ["mv/b0", "mv/b1", "mv/b2"]
+    np.testing.assert_array_equal(backend.load("mv/b0"), a)
+    np.testing.assert_array_equal(backend.load("mv/b1"), b)
+    np.testing.assert_array_equal(backend.load("mv/b2"), d)
+    backend.close()
+    store.close()
+
+
+def test_checkpoint_safs_rejects_ram_store(disk_tmp):
+    with pytest.raises(TypeError):
+        ck.save_safs(os.path.join(disk_tmp, "ck"), 0, TieredStore())
+
+
+# -------------------------------------------------------------- end to end
+def test_eigsh_safs_matches_ram_backend(disk_tmp, small_graph):
+    """The acceptance bar at test scale: Krylov–Schur with the subspace in
+    page files converges to the same spectrum as the ram emulation, and the
+    tier stays read-dominated (Table 3)."""
+    from repro.graphs import pack_tiles
+    from repro.core import GraphOperator, eigsh
+    n, r, c, v, a = small_graph
+    tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+
+    def run(backend, opts):
+        store = TieredStore(device_budget_bytes=2 * n * 4 * 4,
+                            backend=backend, backend_opts=opts)
+        op = GraphOperator(tm, store=store, impl="ref")
+        res = eigsh(op, 4, block_size=4, tol=1e-7, max_restarts=60,
+                    store=store, impl="ref", group_size=2)
+        return res, store
+
+    res_ram, _ = run("ram", None)
+    res_safs, store = run("safs", {"root": os.path.join(disk_tmp, "sub"),
+                                   "cache_bytes": 6 * 4096})
+    np.testing.assert_allclose(np.sort(res_safs.eigenvalues),
+                               np.sort(res_ram.eigenvalues), rtol=1e-5)
+    s = store.stats
+    assert s.host_bytes_read > 10 * s.host_bytes_written
+    assert store.backend.stats.host_bytes_read > 0   # really hit the medium
+    store.close()
