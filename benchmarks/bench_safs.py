@@ -1,21 +1,34 @@
 """SAFS page store — Table 3 / §3.4.2 measurements on the file backend.
 
-Three ladders, all on a scaled-down subspace streamed from real page files:
+Four ladders on real page files, emitted two ways: the harness CSV
+(`benchmarks/run.py safs`) and a machine-readable `BENCH_safs.json`
+(`python benchmarks/bench_safs.py [--smoke] [--out PATH]`) that tracks
+the I/O-path perf trajectory from PR 3 onward:
 
-  safs_stream      MvTimesMatAddMv with the subspace on disk, prefetch OFF
-                   vs ON — the §3.4.2 claim that overlapping page reads
-                   with compute recovers most of the in-memory rate; the
-                   derived column reports the overlap seconds (acceptance:
-                   nonzero).
+  read_throughput  pages/s at 4 KiB and 64 KiB page size, three ways:
+                   the PR-2 *legacy* path (one python pread per page),
+                   the *batched* vectored engine (coalesced preadv runs),
+                   and the batched engine driven by the multi-worker
+                   readahead pool. The acceptance bar is batched ≥ 2x
+                   legacy at 4 KiB — the grain where the python syscall
+                   loop was the bottleneck (ROADMAP follow-up, now fixed).
+  safs_stream      MvTimesMatAddMv with the subspace on disk, prefetch
+                   OFF vs ON — the §3.4.2 claim that overlapping page
+                   reads with compute recovers most of the in-memory
+                   rate; reports the overlap fraction (busy time hidden
+                   behind compute / total busy).
   safs_endurance   physical disk writes vs logical tier writes during an
                    append+restart-compress cycle — write-back + pinning
                    keep the medium's write traffic at or below logical
-                   (Table 3 endurance argument).
-  safs_cache       page-cache hit rate for the reorthogonalization re-read
-                   pattern (most-recent-block pinning, §3.4.4).
+                   (Table 3 endurance argument); also reports the
+                   write-behind queue's high-water depth.
+  safs_cache       page-cache hit rate for the reorthogonalization
+                   re-read pattern (most-recent-block pinning, §3.4.4).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import shutil
 import tempfile
@@ -25,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import MultiVector, TieredStore
+from repro.safs.pagefile import PageFile
+from repro.safs.prefetch import Prefetcher
 
 
 def _mk(store, n, m, b, group_size=2):
@@ -35,38 +50,119 @@ def _mk(store, n, m, b, group_size=2):
     return mv
 
 
-def _safs_store(root, n, b, *, enable_prefetch):
-    # cache holds ~3 blocks of a >8-block subspace: genuinely streaming
-    # 64 KiB pages: SAFS's 4 KiB default is faithful but the python page
-    # loop dominates at that grain; the I/O ratios are page-size invariant
+def _safs_store(root, n, b, *, enable_prefetch, page_size=4096):
+    # cache holds ~3 blocks of a >8-block subspace: genuinely streaming.
+    # 4 KiB pages are affordable now that reads go through coalesced
+    # preadv runs instead of a python per-page loop (see read_throughput).
     return TieredStore(
         device_budget_bytes=2 * n * 4 * b, backend="safs",
         backend_opts={"root": root, "cache_bytes": 3 * n * 4 * b,
-                      "page_size": 65536,
+                      "page_size": page_size,
                       "enable_prefetch": enable_prefetch})
 
 
-def run(csv_rows: list):
-    n, b, m = 60000, 4, 64          # subspace 16 blocks, ~15 MB on disk
-    small = jnp.asarray(
-        np.random.default_rng(1).standard_normal((m, b)), jnp.float32)
+# ------------------------------------------------------------ throughput
+def _read_throughput(root, page_size, *, nfiles, file_kb):
+    """pages/s for the legacy per-page pread loop vs the batched vectored
+    engine vs the readahead pool, over freshly written page files."""
+    os.makedirs(root, exist_ok=True)
+    paths = []
+    for f in range(nfiles):
+        arr = np.random.default_rng(f).standard_normal(
+            file_kb * 256).astype(np.float32)          # file_kb KiB of data
+        pf = PageFile(os.path.join(root, f"t{f}.pages"),
+                      page_size=page_size, shape=arr.shape, dtype="float32")
+        pf.write_pages(pf.split(arr))
+        pf.close()
+        paths.append(os.path.join(root, f"t{f}.pages"))
+    pfs = [PageFile(p) for p in paths]
+    n_pages = sum(pf.n_pages for pf in pfs)
+
+    def best_of(fn, repeats=3):
+        # this box's scheduling jitter swings raw rates several-fold;
+        # best-of-N is the standard throughput answer
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def legacy():                        # the PR-2 path: python pread/page
+        for pf in pfs:
+            for i in pf.page_indices():
+                pf.read_page(i)
+
+    def batched():                       # coalesced vectored runs
+        for pf in pfs:
+            pf.read_pages_batch(range(pf.n_pages))
+
+    t_legacy = best_of(legacy)
+    t_batched = best_of(batched)
+
+    by_name = {p: pf for p, pf in zip(paths, pfs)}
+    pool = Prefetcher(
+        lambda p: sum(len(d) for d in
+                      by_name[p].read_pages_batch(
+                          range(by_name[p].n_pages)).values()),
+        io_workers=4, depth=nfiles)
+
+    def pooled():
+        pool.schedule(paths)
+        pool.drain()
+
+    pooled()                             # warm the worker threads
+    t_pool = best_of(pooled)
+    pool.close()
+    for pf in pfs:
+        pf.delete()
+
+    return {
+        "page_size": page_size,
+        "n_pages": n_pages,
+        "legacy_pages_per_s": n_pages / max(t_legacy, 1e-9),
+        "batched_pages_per_s": n_pages / max(t_batched, 1e-9),
+        "readahead_pool_pages_per_s": n_pages / max(t_pool, 1e-9),
+        "speedup_batched_vs_legacy": t_legacy / max(t_batched, 1e-9),
+        "speedup_pool_vs_legacy": t_legacy / max(t_pool, 1e-9),
+    }
+
+
+# ------------------------------------------------------------- ladders
+def collect(*, smoke: bool = False) -> dict:
+    """Run every ladder; returns the BENCH_safs.json metrics dict."""
+    n, b, m = (12000, 4, 32) if smoke else (60000, 4, 64)
+    nfiles, file_kb = (4, 512) if smoke else (8, 2048)
+    out: dict = {"schema": "bench_safs/v1", "smoke": smoke}
     root = tempfile.mkdtemp(prefix="bench_safs_")
     try:
+        out["read_throughput"] = {
+            str(ps): _read_throughput(os.path.join(root, f"rt{ps}"), ps,
+                                      nfiles=nfiles, file_kb=file_kb)
+            for ps in (4096, 65536)}
+
+        stream = {}
         for tag, pref in (("prefetch_off", False), ("prefetch_on", True)):
             store = _safs_store(os.path.join(root, tag), n, b,
                                 enable_prefetch=pref)
             mv = _mk(store, n, m, b)
+            small = jnp.asarray(np.random.default_rng(1)
+                                .standard_normal((m, b)), jnp.float32)
             store.flush()
             store.reset_stats()
             t0 = time.perf_counter()
             mv.mv_times_mat(small)
             if pref:
                 store.backend.prefetcher.drain()
-            us = (time.perf_counter() - t0) * 1e6
-            ov = store.backend.prefetcher.stats()["overlap_seconds"]
-            csv_rows.append(("safs_stream", f"m={m},{tag}", us,
-                             f"overlap_s={ov:.4f}"))
+            stream[tag] = {"us": (time.perf_counter() - t0) * 1e6}
+            pf = store.backend.prefetcher.stats()
+            stream[tag].update(
+                overlap_seconds=pf["overlap_seconds"],
+                busy_seconds=pf["busy_seconds"],
+                overlap_fraction=(pf["overlap_seconds"]
+                                  / max(pf["busy_seconds"], 1e-9)))
             store.close()
+        out["safs_stream"] = stream
 
         # endurance: logical vs physical writes over append + compress
         store = _safs_store(os.path.join(root, "endurance"), n, b,
@@ -78,18 +174,73 @@ def run(csv_rows: list):
         mv.compress(q, [b] * (m // 2 // b))
         us = (time.perf_counter() - t0) * 1e6
         store.flush()
-        logical_w = store.stats.host_bytes_written
-        physical_w = store.backend.stats.host_bytes_written
-        csv_rows.append(("safs_endurance", f"m={m}", us,
-                         f"disk_over_logical_writes="
-                         f"{physical_w / max(logical_w, 1):.2f}"))
+        wb = store.backend.writebehind
+        out["safs_endurance"] = {
+            "us": us,
+            "logical_bytes_written": store.stats.host_bytes_written,
+            "physical_bytes_written": store.backend.stats.host_bytes_written,
+            "disk_over_logical_writes":
+                (store.backend.stats.host_bytes_written
+                 / max(store.stats.host_bytes_written, 1)),
+            "write_behind": wb.stats_dict() if wb is not None else None,
+        }
 
         # reorth re-read pattern: newest block re-read right after demote
         d = store.backend.stats
-        hit_rate = d.cache_hits / max(d.cache_hits + d.cache_misses, 1)
-        csv_rows.append(("safs_cache", f"m={m}", 0.0,
-                         f"page_hit_rate={hit_rate:.2f}"))
+        out["safs_cache"] = {
+            "page_hit_rate": d.cache_hits / max(d.cache_hits
+                                                + d.cache_misses, 1)}
         store.close()
     finally:
         shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def run(csv_rows: list):
+    """Harness entry (`benchmarks/run.py safs`): CSV rows off collect()."""
+    m = collect()
+    for ps, r in m["read_throughput"].items():
+        csv_rows.append((
+            "safs_read", f"page={ps}",
+            1e6 * r["n_pages"] / r["batched_pages_per_s"],
+            f"batched_over_legacy={r['speedup_batched_vs_legacy']:.2f}"))
+    for tag, r in m["safs_stream"].items():
+        csv_rows.append(("safs_stream", f"m=64,{tag}", r["us"],
+                         f"overlap_s={r['overlap_seconds']:.4f}"))
+    e = m["safs_endurance"]
+    csv_rows.append(("safs_endurance", "m=64", e["us"],
+                     f"disk_over_logical_writes="
+                     f"{e['disk_over_logical_writes']:.2f}"))
+    csv_rows.append(("safs_cache", "m=64", 0.0,
+                     f"page_hit_rate={m['safs_cache']['page_hit_rate']:.2f}"))
     return csv_rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down sizes (tier-1 trajectory tracking)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "results", "BENCH_safs.json"))
+    args = ap.parse_args()
+    metrics = collect(smoke=args.smoke)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(metrics, f, indent=2)
+    r4 = metrics["read_throughput"]["4096"]
+    print(f"wrote {args.out}")
+    print(f"4 KiB pages: legacy {r4['legacy_pages_per_s']:,.0f} pages/s, "
+          f"batched {r4['batched_pages_per_s']:,.0f} pages/s "
+          f"({r4['speedup_batched_vs_legacy']:.1f}x), "
+          f"pool {r4['readahead_pool_pages_per_s']:,.0f} pages/s "
+          f"({r4['speedup_pool_vs_legacy']:.1f}x)")
+    on = metrics["safs_stream"]["prefetch_on"]
+    print(f"prefetch overlap fraction: {on['overlap_fraction']:.2f}")
+    wb = metrics["safs_endurance"]["write_behind"]
+    if wb:
+        print(f"write-behind peak queue depth: {wb['max_depth_pages']} pages")
+
+
+if __name__ == "__main__":
+    main()

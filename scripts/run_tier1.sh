@@ -31,3 +31,9 @@ trap 'rm -rf "$DISK_TMP"' EXIT
 echo "== disk-marked subset (TMPDIR=$DISK_TMP) =="
 TMPDIR="$DISK_TMP" python -m pytest -x -q -m disk
 echo "disk subset TMPDIR footprint: $(du -sh "$DISK_TMP" | cut -f1)"
+
+# Smoke-sized SAFS I/O-path benchmark: refreshes results/BENCH_safs.json
+# (pages/s at 4 KiB / 64 KiB, prefetch overlap fraction, write-behind
+# queue depth) so the perf trajectory is tracked from PR 3 onward.
+echo "== bench_safs smoke (results/BENCH_safs.json) =="
+TMPDIR="$DISK_TMP" python benchmarks/bench_safs.py --smoke

@@ -13,10 +13,13 @@ operations of Table 1 are implemented block-streamed:
   * the newest block is pinned in the device tier (most-recent-block cache);
   * transpose/CloneView share `data_id` with their parent so the cache
     recognizes identical bytes;
-  * grouped streaming double-buffers: before contracting group g the next
-    group's blocks are handed to `TieredStore.prefetch`, so with the file
-    backend (`TieredStore(backend="safs")`, §3.4.1) page reads overlap the
-    JAX compute of the current group (a no-op on the default ram backend).
+  * grouped streaming reads ahead: before contracting group g the next
+    `readahead` groups' blocks are handed to `TieredStore.prefetch`, so
+    with the file backend (`TieredStore(backend="safs")`, §3.4.1) the
+    multi-worker readahead pool keeps page reads in flight under the JAX
+    compute of the current group (a no-op on the default ram backend).
+    The scheduler's own `depth` bounds how much of the announced pattern
+    is actually queued, so a deep `readahead` cannot thrash the cache.
 """
 from __future__ import annotations
 
@@ -45,8 +48,8 @@ class MultiVector:
 
     def __init__(self, store: TieredStore | None, n: int, *,
                  name: str | None = None, group_size: int = 8,
-                 impl: kops.Impl = "auto", backend="ram",
-                 backend_opts: dict | None = None):
+                 readahead: int = 2, impl: kops.Impl = "auto",
+                 backend="ram", backend_opts: dict | None = None):
         if name is None:
             MultiVector._counter += 1
             name = f"mv{MultiVector._counter}"
@@ -56,6 +59,7 @@ class MultiVector:
         self.n = n
         self.name = name
         self.group_size = group_size
+        self.readahead = max(1, int(readahead))  # groups announced ahead
         self.impl = impl
         self._blocks: List[_Block] = []
 
@@ -75,10 +79,13 @@ class MultiVector:
         return self._blocks[i].name
 
     def _prefetch_group(self, g0: int) -> None:
-        """Double-buffer: stage the next group's blocks (async backend I/O
-        overlapping the current group's compute; no-op on ram backend)."""
-        self.store.prefetch([b.name for b in
-                             self._blocks[g0:g0 + self.group_size]])
+        """Readahead: announce the next `readahead` groups' blocks to the
+        backend's scheduler (async I/O overlapping the current group's
+        compute; no-op on ram backend). The scheduler's depth bounds how
+        many are actually queued."""
+        self.store.prefetch(
+            [b.name for b in
+             self._blocks[g0:g0 + self.readahead * self.group_size]])
 
     def block(self, i: int) -> jnp.ndarray:
         """Materialize block i (applies any lazy scale)."""
@@ -186,7 +193,7 @@ class MultiVector:
         """MvAddMv: C <- alpha*A + beta*B (blockwise, same block structure)."""
         assert self.block_widths() == other.block_widths()
         out = MultiVector(self.store, self.n, group_size=self.group_size,
-                          impl=self.impl)
+                          readahead=self.readahead, impl=self.impl)
         for i in range(self.nblocks):
             out.append_block(alpha * self.block(i) + beta * other.block(i),
                              pin_recent=False)
@@ -235,7 +242,7 @@ class MultiVector:
         assert q.shape[0] == self.ncols
         assert sum(new_widths) == q.shape[1]
         out = MultiVector(self.store, self.n, group_size=self.group_size,
-                          impl=self.impl)
+                          readahead=self.readahead, impl=self.impl)
         off = 0
         for w in new_widths:
             blk = self.mv_times_mat(q[:, off:off + w])

@@ -12,7 +12,8 @@ Three first-class implementations (DESIGN.md §4):
 """
 from __future__ import annotations
 
-from typing import Callable, Protocol
+import dataclasses
+from typing import Callable, List, Protocol
 
 import jax
 import jax.flatten_util
@@ -20,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.tiles import TiledMatrix
-from repro.core.tiered import TieredStore
+from repro.core.tiered import HOST, TieredStore
 from repro.kernels import ops as kops
 
 
@@ -32,6 +33,20 @@ class LinearOperator(Protocol):
         ...
 
 
+@dataclasses.dataclass
+class _ImageChunk:
+    """One streamed span of the matrix image: the dense blocks of block
+    rows [br_lo, br_hi) live in the page store under `name`; the *index*
+    (block_cols, rebased block_rows, row mask) stays in fast memory —
+    exactly the paper's split of §3.3.1 (matrix index in RAM, edge tiles
+    on SSD)."""
+    name: str
+    n_block_rows: int
+    block_cols: jnp.ndarray
+    block_rows: jnp.ndarray
+    row_mask: jnp.ndarray
+
+
 class GraphOperator:
     """Semi-external-memory SpMM operator over a TiledMatrix image.
 
@@ -39,27 +54,118 @@ class GraphOperator:
     (sequential read — the paper's §3.3.3 pattern) and the TieredStore
     read counter advances by the image size. The dense operand X is the
     in-memory/fast-tier side of the semi-external split.
+
+    Two residency modes for the image:
+
+      * default (stream_image=False): the dense blocks are RAM/device
+        resident jnp arrays; the stream is *accounted* against the store
+        but not physically performed — the seed emulation;
+      * stream_image=True (requires a store): the edge tiles really do
+        live in the store's page files — `__init__` spills them as
+        block-row chunks of ~image_chunk_bytes (plus the COO remainder),
+        and every matmat walks the chunks through `TieredStore.stream`,
+        SpMM-ing each span while the readahead pool stages the next one.
+        With `TieredStore(backend="safs")` this makes matmat truly
+        semi-external: subspace AND matrix bytes traverse the same page
+        cache / vectored-I/O path. Only the matrix *index* stays in fast
+        memory, as in the paper.
     """
 
+    _counter = 0
+
     def __init__(self, tm: TiledMatrix, *, store: TieredStore | None = None,
-                 impl: kops.Impl = "auto", symmetric: bool = True):
-        self.tm = tm
+                 impl: kops.Impl = "auto", symmetric: bool = True,
+                 stream_image: bool = False,
+                 image_chunk_bytes: int = 4 << 20,
+                 image_readahead: int = 2, name: str | None = None):
         self.n = tm.shape[0]
         self.store = store
         self.impl = impl
         self.symmetric = symmetric
-        self._blocks = jnp.asarray(tm.blocks)
-        self._block_cols = jnp.asarray(tm.block_cols)
-        self._block_rows = jnp.asarray(
-            kops.block_rows_from_ptr(np.asarray(tm.row_ptr)))
-        self._row_mask = jnp.asarray(
-            kops.empty_row_mask(np.asarray(tm.row_ptr), tm.block_shape[0]))
-        self._coo = (jnp.asarray(tm.coo_rows), jnp.asarray(tm.coo_cols),
-                     jnp.asarray(tm.coo_vals))
         self._image_bytes = tm.nbytes_image()
+        self.stream_image = bool(stream_image)
+        if self.stream_image:
+            if store is None:
+                raise ValueError("stream_image=True requires a TieredStore")
+            self.tm = None      # blocks live in the page store, not here
+            self._init_streamed(tm, image_chunk_bytes, image_readahead, name)
+        else:
+            self.tm = tm
+            self._blocks = jnp.asarray(tm.blocks)
+            self._block_cols = jnp.asarray(tm.block_cols)
+            self._block_rows = jnp.asarray(
+                kops.block_rows_from_ptr(np.asarray(tm.row_ptr)))
+            self._row_mask = jnp.asarray(
+                kops.empty_row_mask(np.asarray(tm.row_ptr),
+                                    tm.block_shape[0]))
+            self._coo = (jnp.asarray(tm.coo_rows), jnp.asarray(tm.coo_cols),
+                         jnp.asarray(tm.coo_vals))
 
+    # ------------------------------------------------- SSD-streamed image
+    def _init_streamed(self, tm: TiledMatrix, chunk_bytes: int,
+                       readahead: int, name: str | None) -> None:
+        GraphOperator._counter += 1
+        self._name = name or f"Aimg{GraphOperator._counter}"
+        self._bm = tm.block_shape[0]
+        self._readahead = int(readahead)
+        self._chunks: List[_ImageChunk] = []
+        row_ptr = np.asarray(tm.row_ptr)
+        for k, (r0, r1, b0, b1) in enumerate(tm.chunk_block_rows(chunk_bytes)):
+            cname = f"{self._name}/tiles/c{k}"
+            self.store.put(cname, tm.blocks[b0:b1], tier=HOST)
+            sub_ptr = row_ptr[r0:r1 + 1]
+            self._chunks.append(_ImageChunk(
+                name=cname, n_block_rows=r1 - r0,
+                block_cols=jnp.asarray(tm.block_cols[b0:b1]),
+                block_rows=jnp.asarray(
+                    kops.block_rows_from_ptr(sub_ptr - sub_ptr[0])),
+                row_mask=jnp.asarray(
+                    kops.empty_row_mask(sub_ptr, self._bm))))
+        self._has_coo = tm.coo_vals.size > 0
+        if self._has_coo:
+            self.store.put(f"{self._name}/coo_rows", tm.coo_rows, tier=HOST)
+            self.store.put(f"{self._name}/coo_cols", tm.coo_cols, tier=HOST)
+            self.store.put(f"{self._name}/coo_vals", tm.coo_vals, tier=HOST)
+
+    def _matmat_streamed(self, x: jnp.ndarray) -> jnp.ndarray:
+        from repro.kernels.spmm_ref import coo_spmm_ref
+        k = x.shape[1]
+        parts: List[jnp.ndarray] = []
+        names = [c.name for c in self._chunks]
+        for ci, blocks in enumerate(self.store.stream(
+                names, readahead=self._readahead)):
+            c = self._chunks[ci]
+            if blocks.shape[0] == 0:     # span of empty block rows
+                parts.append(jnp.zeros((c.n_block_rows * self._bm, k),
+                                       jnp.float32))
+                continue
+            parts.append(kops.spmm_blocks(
+                blocks, c.block_cols, c.block_rows, c.row_mask, x,
+                n_block_rows=c.n_block_rows, impl=self.impl))
+        y = (jnp.concatenate(parts, axis=0) if parts
+             else jnp.zeros((self.n, k), jnp.float32))
+        if self._has_coo:
+            y = y + coo_spmm_ref(self.store.get(f"{self._name}/coo_rows"),
+                                 self.store.get(f"{self._name}/coo_cols"),
+                                 self.store.get(f"{self._name}/coo_vals"),
+                                 x, self.n)
+        return y
+
+    def delete_image(self) -> None:
+        """Drop the spilled image entries (streamed mode only)."""
+        if not self.stream_image:
+            return
+        for c in self._chunks:
+            self.store.delete(c.name)
+        if self._has_coo:
+            for part in ("coo_rows", "coo_cols", "coo_vals"):
+                self.store.delete(f"{self._name}/{part}")
+
+    # ---------------------------------------------------------------- apply
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
-        if self.store is not None:  # account the streamed image read
+        if self.stream_image:   # reads counted by the store itself
+            return self._matmat_streamed(x)
+        if self.store is not None:  # account the emulated image stream
             self.store.stats.host_bytes_read += self._image_bytes
             self.store.stats.host_reads += 1
         y = kops.spmm_blocks(self._blocks, self._block_cols, self._block_rows,

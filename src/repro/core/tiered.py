@@ -197,6 +197,19 @@ class TieredStore:
         if ids:
             self.backend.prefetch(ids)
 
+    def stream(self, names: Iterable[str], *, readahead: int = 2):
+        """Yield `get(name)` for each name while keeping the next
+        `readahead` entries' pages in flight on the backend's readahead
+        pool — the generic sequential-scan driver (SSD-streamed SpMM
+        walks the matrix-image chunks with it; grouped MultiVector passes
+        use the same pattern via `prefetch`). On the ram backend it
+        degenerates to a plain `get` loop."""
+        names = list(names)
+        for i, nm in enumerate(names):
+            if readahead > 0:
+                self.prefetch(names[i + 1:i + 1 + readahead])
+            yield self.get(nm)
+
     def flush(self) -> None:
         """Force dirty host-tier pages down to the physical medium."""
         self.backend.flush()

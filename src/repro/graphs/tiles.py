@@ -144,6 +144,35 @@ class TiledMatrix:
                 + self.coo_rows.nbytes + self.coo_cols.nbytes
                 + self.coo_vals.nbytes)
 
+    def chunk_block_rows(self, target_bytes: int
+                         ) -> list[Tuple[int, int, int, int]]:
+        """Split the image into contiguous block-row spans of dense blocks
+        totalling ~target_bytes each: `[(br_lo, br_hi, blk_lo, blk_hi)]`
+        with blocks[blk_lo:blk_hi] exactly the blocks of block rows
+        [br_lo, br_hi). This is the unit the SSD-streamed SpMM reads per
+        request (the paper's §3.3.3 sequential scan, page-store edition):
+        each span becomes one page-store entry, loaded as coalesced
+        vectored runs and prefetched one span ahead of the contraction.
+        Never splits inside a block row, so per-span SpMM needs only a
+        rebased row index. Returns [] for an image with no block rows.
+        """
+        if self.n_block_rows == 0:
+            return []
+        bm, bn = self.block_shape
+        per_block = bm * bn * self.blocks.itemsize if self.nblocks else 0
+        spans: list[Tuple[int, int, int, int]] = []
+        br_lo, cur = 0, 0
+        for br in range(self.n_block_rows):
+            b = int(self.row_ptr[br + 1] - self.row_ptr[br]) * per_block
+            if cur and cur + b > target_bytes:
+                spans.append((br_lo, br, int(self.row_ptr[br_lo]),
+                              int(self.row_ptr[br])))
+                br_lo, cur = br, 0
+            cur += b
+        spans.append((br_lo, self.n_block_rows, int(self.row_ptr[br_lo]),
+                      int(self.row_ptr[-1])))
+        return spans
+
     def to_dense(self) -> np.ndarray:
         n, m = self.shape
         bm, bn = self.block_shape

@@ -2,13 +2,16 @@
 
 See README.md in this directory for the paper mapping.
 """
-from repro.safs.pagefile import PAGE_SIZE, CrashPoint, PageFile
-from repro.safs.cache import PageCache
-from repro.safs.prefetch import Prefetcher
+from repro.safs.pagefile import (PAGE_SIZE, CrashPoint, PageFile,
+                                 coalesce_runs)
+from repro.safs.cache import PageCache, WriteBehind, WriteBehindError
+from repro.safs.prefetch import PrefetchError, Prefetcher
 from repro.safs.backend import (RamBackend, SafsBackend, StorageBackend,
                                 make_backend)
 
 __all__ = [
-    "PAGE_SIZE", "CrashPoint", "PageFile", "PageCache", "Prefetcher",
+    "PAGE_SIZE", "CrashPoint", "PageFile", "coalesce_runs",
+    "PageCache", "WriteBehind", "WriteBehindError",
+    "PrefetchError", "Prefetcher",
     "RamBackend", "SafsBackend", "StorageBackend", "make_backend",
 ]

@@ -7,14 +7,20 @@ slow-tier bytes physically live. Two implementations:
   * `RamBackend` — numpy buffers in host memory: exactly the seed repo's
     emulation, still the default for tier-1 tests (fast, no filesystem);
   * `SafsBackend` — the paper's layer: one PageFile per data_id under a
-    root directory, fronted by a shared LRU `PageCache` with write-back and
-    most-recent-block pinning, and a `Prefetcher` that overlaps page reads
-    with compute. Its `stats` count *actual disk traffic* (endurance),
-    which is ≤ the logical tier traffic TieredStore counts whenever the
-    page cache absorbs re-reads — the paper's Table-3 gap, measurable.
+    root directory, fronted by a shared LRU `PageCache` with async
+    write-behind demotions, and a multi-worker readahead `Prefetcher`
+    that overlaps page reads with compute. All disk reads go through the
+    batched vectored engine (`PageFile.read_pages_batch`: coalesced
+    preadv runs — one syscall per run, not per 4 KiB page). Its `stats`
+    count *actual disk traffic* (endurance), which is ≤ the logical tier
+    traffic TieredStore counts whenever the page cache absorbs re-reads —
+    the paper's Table-3 gap, measurable.
 
 Select per store:  `TieredStore(backend="safs", backend_opts={"root": dir})`
 or pass a constructed backend instance (shared across stores if desired).
+Throughput knobs (see bench_safs.py / BENCH_safs.json for their effect):
+`io_workers` (readahead pool size), `readahead_depth` (files queued ahead),
+`write_behind` (async demotions; `wb_max_pages` bounds the queue).
 """
 from __future__ import annotations
 
@@ -26,9 +32,9 @@ from typing import Dict, Iterable, Optional, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.tiered import IOStats
-from repro.safs.cache import PageCache
+from repro.safs.cache import PageCache, WriteBehind
 from repro.safs.pagefile import PAGE_SIZE, PageFile
-from repro.safs.prefetch import Prefetcher
+from repro.safs.prefetch import PrefetchError, Prefetcher
 
 
 @runtime_checkable
@@ -92,11 +98,14 @@ class RamBackend:
 
 # ---------------------------------------------------------------- safs
 class SafsBackend:
-    """File-backed slow tier: PageFiles + shared page cache + prefetcher."""
+    """File-backed slow tier: PageFiles + shared page cache + readahead
+    pool + async write-behind demotions."""
 
     def __init__(self, root: str, *, page_size: int = PAGE_SIZE,
                  cache_bytes: int = 64 << 20, use_mmap: bool = False,
-                 enable_prefetch: bool = True):
+                 enable_prefetch: bool = True, io_workers: int = 2,
+                 readahead_depth: int = 8, write_behind: bool = True,
+                 wb_max_pages: int = 4096):
         self.root = root
         self.page_size = int(page_size)
         self.use_mmap = use_mmap
@@ -106,7 +115,13 @@ class SafsBackend:
         self._lock = threading.RLock()
         self.cache = PageCache(cache_bytes, self.page_size, self._writeback)
         self.stats = self.cache.stats      # shared: byte-exact disk traffic
-        self.prefetcher = Prefetcher(self._fill)
+        self.writebehind: Optional[WriteBehind] = None
+        if write_behind:
+            self.writebehind = WriteBehind(self._writeback_sync,
+                                           max_pages=wb_max_pages,
+                                           stats=self.stats)
+        self.prefetcher = Prefetcher(self._fill, io_workers=io_workers,
+                                     depth=readahead_depth)
         self._reopen()
 
     # ------------------------------------------------------------- naming
@@ -134,24 +149,71 @@ class SafsBackend:
             return list(self._files)
 
     # ------------------------------------------------------------- plumbing
+    def _writeback_sync(self, data_id: str, pages: Dict[int, bytes]) -> int:
+        with self._lock:
+            pf = self._files.get(data_id)
+        if pf is None:      # deleted while the batch sat in the queue
+            return 0
+        return pf.write_pages(pages)
+
     def _writeback(self, data_id: str, pages: Dict[int, bytes]) -> int:
-        return self._files[data_id].write_pages(pages)
+        """Cache demotion sink: async via the write-behind queue when
+        enabled (returns 0 — the queue accounts the bytes at retire),
+        synchronous journaled write otherwise."""
+        if self.writebehind is not None:
+            return self.writebehind.submit(data_id, pages)
+        return self._writeback_sync(data_id, pages)
+
+    def _stage_page(self, data_id: str, i: int) -> Optional[bytes]:
+        """A page's newest bytes short of the disk (never stale disk
+        bytes). Freshness order: dirty cache line > write-behind queue >
+        clean cache line — a *clean* line can be a stale disk fill that
+        raced a concurrent evict-into-queue, so queued bytes beat it."""
+        got = self.cache.get(data_id, i, with_dirty=True)
+        # the emptiness probe is only safe *after* the cache lookup: an
+        # eviction publishes its queue insert before the cache lock drops
+        if got is not None:
+            data, dirty = got
+            if (dirty or self.writebehind is None
+                    or self.writebehind.empty()):
+                return data
+            wb = self.writebehind.lookup(data_id, i)
+            return data if wb is None else wb
+        if self.writebehind is not None and not self.writebehind.empty():
+            data = self.writebehind.lookup(data_id, i)
+            if data is not None:
+                self.cache.put(data_id, i, data, dirty=False)
+            return data
+        return None
 
     def _fill(self, data_id: str) -> int:
-        """Read every non-resident page of data_id into the cache (clean).
-        Runs on the prefetch thread; pread keeps it safe vs the consumer."""
+        """Batched cache fill: every non-resident page of data_id, read as
+        coalesced vectored runs (one preadv per run). Runs on the
+        readahead workers; pread keeps it safe vs the consumer."""
         with self._lock:
             pf = self._files.get(data_id)
         if pf is None:
             return 0
-        n = 0
+        wb = (self.writebehind
+              if self.writebehind is not None and not self.writebehind.empty()
+              else None)
+        missing = []
         for i in pf.page_indices():
             if self.cache.peek(data_id, i):
                 continue
-            data = pf.read_page(i)
-            self.cache.fill_bytes_read(len(data))
+            if wb is not None and wb.lookup(data_id, i) is not None:
+                continue               # disk copy is stale; skip
+            missing.append(i)
+        if not missing:
+            return 0
+        n = 0
+        for i, data in pf.read_pages_batch(missing).items():
             n += len(data)
+            if (self.writebehind is not None
+                    and self.writebehind.lookup(data_id, i) is not None):
+                continue   # dirtied + evicted while we read: ours is stale
             self.cache.put(data_id, i, data, dirty=False)
+        self.cache.fill_bytes_read(n)
         return n
 
     # ------------------------------------------------------------- protocol
@@ -159,10 +221,14 @@ class SafsBackend:
         a = np.ascontiguousarray(arr)
         with self._lock:
             pf = self._files.get(data_id)
-            if pf is not None and (pf.shape != a.shape
-                                   or pf.dtype != a.dtype):
-                self.delete(data_id)
-                pf = None
+            mismatch = pf is not None and (pf.shape != a.shape
+                                           or pf.dtype != a.dtype)
+        if mismatch:
+            # outside the lock: delete's discard waits out an in-flight
+            # write-behind batch whose writer needs this lock (deadlock)
+            self.delete(data_id)
+        with self._lock:
+            pf = self._files.get(data_id)
             if pf is None:
                 pf = PageFile(self._path(data_id), page_size=self.page_size,
                               shape=a.shape, dtype=a.dtype.name,
@@ -172,20 +238,38 @@ class SafsBackend:
             self.cache.put(data_id, i, payload, dirty=True)
 
     def load(self, data_id: str) -> np.ndarray:
-        self.prefetcher.wait(data_id)
+        try:
+            self.prefetcher.wait(data_id)
+        except PrefetchError:
+            pass    # fall through: the batched miss path below re-reads
         with self._lock:
             pf = self._files[data_id]
         pages: Dict[int, bytes] = {}
+        missing = []
         for i in pf.page_indices():
-            data = self.cache.get(data_id, i)
+            data = self._stage_page(data_id, i)
             if data is None:
-                data = pf.read_page(i)
-                self.cache.fill_bytes_read(len(data))
+                missing.append(i)
+            else:
+                pages[i] = data
+        if missing:       # one coalesced vectored read for all misses
+            filled = pf.read_pages_batch(missing)
+            self.cache.fill_bytes_read(sum(len(d) for d in filled.values()))
+            for i, data in filled.items():
+                if self.writebehind is not None:
+                    wb = self.writebehind.lookup(data_id, i)
+                    if wb is not None:   # evicted into the queue mid-read
+                        pages[i] = wb
+                        continue
                 self.cache.put(data_id, i, data, dirty=False)
-            pages[i] = data
+                pages[i] = data
         return pf.assemble(pages)
 
     def delete(self, data_id: str) -> None:
+        # discard first (it waits out an in-flight batch), THEN unmap the
+        # file — so the drain thread never writes into a vanished id
+        if self.writebehind is not None:
+            self.writebehind.discard(data_id)
         with self._lock:
             pf = self._files.pop(data_id, None)
         self.cache.invalidate(data_id, drop_dirty=True)
@@ -207,8 +291,17 @@ class SafsBackend:
             self.prefetcher.schedule([d for d in data_ids if self.has(d)])
 
     def flush(self, data_id: str | None = None) -> int:
-        """Write back all dirty pages (journaled per file) and fsync."""
-        n = self.cache.flush(data_id)
+        """Write back all dirty pages (journaled per file), drain the
+        write-behind queue (durability barrier), and fsync. Returns bytes
+        written to the medium (for the async sink: bytes the queue
+        retired during this flush, prior demotions included)."""
+        if self.writebehind is not None:
+            before = self.writebehind.stats_dict()["bytes_retired"]
+            self.cache.flush(data_id)
+            self.writebehind.drain()
+            n = self.writebehind.stats_dict()["bytes_retired"] - before
+        else:
+            n = self.cache.flush(data_id)
         with self._lock:
             files = ([self._files[data_id]] if data_id is not None
                      else list(self._files.values()))
@@ -217,17 +310,24 @@ class SafsBackend:
         return n
 
     def close(self) -> None:
-        self.flush()
-        self.prefetcher.close()
-        with self._lock:
-            for pf in self._files.values():
-                pf.close()
-            self._files.clear()
+        try:
+            self.flush()
+        finally:
+            # a flush failure (WriteBehindError) must still propagate, but
+            # never leak worker threads or page-file fds
+            self.prefetcher.close()
+            if self.writebehind is not None:
+                self.writebehind.close()
+            with self._lock:
+                for pf in self._files.values():
+                    pf.close()
+                self._files.clear()
 
 
 def make_backend(spec, **opts) -> StorageBackend:
     """Factory: 'ram', 'safs' (opts: root, page_size, cache_bytes,
-    use_mmap), or pass through an already-constructed backend."""
+    use_mmap, io_workers, readahead_depth, write_behind, wb_max_pages),
+    or pass through an already-constructed backend."""
     if not isinstance(spec, str):
         return spec
     if spec == "ram":

@@ -15,6 +15,16 @@ Both policies live here:
     the two accounting layers compose: `host_bytes_read/written` count real
     disk traffic (endurance), `cache_hits/misses` count page lookups.
 
+Demotions are *asynchronous* behind `WriteBehind` (§3.4's async I/O made
+concrete): an eviction hands its dirty pages to a bounded queue and
+returns immediately; a drain thread batches the queue per file and pushes
+each batch through the journaled `PageFile.write_pages`, so crash
+consistency is inherited — a page is *acked* (durable) the moment its
+batch's journal commits, and a kill mid-patch is replayed on reopen.
+Until a page retires, `WriteBehind.lookup` serves its newest bytes to
+cache-miss reads (the queue doubles as a victim buffer), so readers can
+never observe the stale on-disk copy of an evicted-but-unwritten page.
+
 Thread safety: one lock around the table — the prefetch thread inserts
 pages while the consumer thread reads them.
 """
@@ -87,12 +97,16 @@ class PageCache:
             if line.dirty:
                 by_file.setdefault(key[0], {})[key[1]] = line.data
         for d, pages in by_file.items():
-            self.stats.host_bytes_written += self._writer(d, pages)
-            self.stats.host_writes += 1
+            n = self._writer(d, pages)
+            if n:      # an async (write-behind) sink returns 0 at submit
+                self.stats.host_bytes_written += n
+                self.stats.host_writes += 1
 
     # ------------------------------------------------------------ lookups
-    def get(self, data_id: str, page: int) -> Optional[bytes]:
-        """Hit → payload (LRU-touched); miss → None (caller reads disk)."""
+    def get(self, data_id: str, page: int, *, with_dirty: bool = False):
+        """Hit → payload (LRU-touched); miss → None (caller reads disk).
+        with_dirty=True returns (payload, dirty) instead — the backend
+        uses the flag to rank a clean line against write-behind bytes."""
         with self._lock:
             line = self._lines.get((data_id, page))
             if line is None:
@@ -100,7 +114,7 @@ class PageCache:
                 return None
             self._lines.move_to_end((data_id, page))
             self.stats.cache_hits += 1
-            return line.data
+            return (line.data, line.dirty) if with_dirty else line.data
 
     def peek(self, data_id: str, page: int) -> bool:
         """Residency probe without touching LRU order or stats (prefetch)."""
@@ -150,8 +164,10 @@ class PageCache:
                     by_file.setdefault(d, {})[p] = line.data
             total = 0
             for d, pages in by_file.items():
-                total += self._writer(d, pages)
-                self.stats.host_writes += 1
+                n = self._writer(d, pages)
+                if n:
+                    self.stats.host_writes += 1
+                total += n
                 for p in pages:
                     self._lines[(d, p)].dirty = False
             self.stats.host_bytes_written += total
@@ -164,9 +180,10 @@ class PageCache:
             for key in [k for k in self._lines if k[0] == data_id]:
                 line = self._lines[key]
                 if line.dirty and not drop_dirty:
-                    self.stats.host_bytes_written += self._writer(
-                        data_id, {key[1]: line.data})
-                    self.stats.host_writes += 1
+                    n = self._writer(data_id, {key[1]: line.data})
+                    if n:
+                        self.stats.host_bytes_written += n
+                        self.stats.host_writes += 1
                 del self._lines[key]
             self._pinned.discard(data_id)
 
@@ -175,3 +192,214 @@ class PageCache:
         with self._lock:
             self.stats.host_bytes_read += n
             self.stats.host_reads += 1
+
+
+# ---------------------------------------------------------------------------
+# Async write-behind queue for cache demotions
+# ---------------------------------------------------------------------------
+class WriteBehindError(RuntimeError):
+    """A background write-back failed; re-raised at submit/drain."""
+
+
+class WriteBehind:
+    """Bounded async write-behind queue over a journaled page writer.
+
+    `writer(data_id, {page: bytes}) -> bytes_written` is the *synchronous*
+    journaled sink (`PageFile.write_pages` via the backend). Eviction paths
+    call `submit` and return immediately; one drain thread pops the oldest
+    file's accumulated pages as a single batch → one journal commit per
+    batch instead of one per evicted page, and in submit order per file
+    (a re-dirtied page resubmitted later can never be overtaken by its
+    older bytes).
+
+    Durability ("ack") semantics: a page is acked once the journal of the
+    batch containing it has committed — from then on a crash is redone on
+    reopen (`PageFile._recover`), so every acked page survives a kill
+    mid-demotion. Pages still queued at the kill are *not* acked; callers
+    needing a durability barrier call `drain()` (backend `flush`/`close`
+    do). Until its batch retires, a page's newest bytes are served by
+    `lookup` — the queue is also the victim buffer for evicted-but-
+    unwritten pages.
+
+    `stats` (an IOStats, usually the PageCache's) is advanced by the drain
+    thread with the *actual* bytes the journaled writer reported, so
+    physical-endurance accounting stays byte-exact even when queue merging
+    collapses a resubmitted page into one write.
+    """
+
+    def __init__(self, writer: Callable[[str, Dict[int, bytes]], int], *,
+                 max_pages: int = 4096, stats: Optional["IOStats"] = None):
+        self._writer = writer
+        self.max_pages = max(1, int(max_pages))
+        self._stats = stats
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: "OrderedDict[str, Dict[int, bytes]]" = OrderedDict()
+        self._inflight: Optional[Tuple[str, Dict[int, bytes]]] = None
+        self._n_pending = 0            # pages queued (excl. in flight)
+        self._error: Optional[BaseException] = None
+        self._error_id: Optional[str] = None   # file the error belongs to
+        self._shutdown = False
+        self.pages_retired = 0
+        self.bytes_retired = 0
+        self.batches_retired = 0
+        self.max_depth_pages = 0       # high-water queue depth (bench stat)
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="safs-writebehind")
+        self._thread.start()
+
+    # ------------------------------------------------------------- worker
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                # pause while a captured error awaits drain(): retrying a
+                # persistently failing writer would spin, and the failed
+                # batch is back in _pending so lookup still serves it
+                while ((not self._pending or self._error is not None)
+                       and not self._shutdown):
+                    self._cv.wait()
+                if self._shutdown and (not self._pending
+                                       or self._error is not None):
+                    return
+                data_id, pages = self._pending.popitem(last=False)
+                self._n_pending -= len(pages)
+                self._inflight = (data_id, pages)
+                self._cv.notify_all()          # submit backpressure
+            err: Optional[BaseException] = None
+            written = 0
+            try:
+                written = self._writer(data_id, pages)
+            except BaseException as e:
+                err = e
+            with self._cv:
+                self._inflight = None
+                if err is None:
+                    self.pages_retired += len(pages)
+                    self.bytes_retired += written
+                    self.batches_retired += 1
+                    if self._stats is not None and written:
+                        self._stats.host_bytes_written += written
+                        self._stats.host_writes += 1
+                else:
+                    if self._error is None:
+                        self._error, self._error_id = err, data_id
+                    # re-queue the failed batch: the queue may hold the
+                    # only copy of these bytes, and dropping them would
+                    # let readers see the stale disk copy. A page
+                    # resubmitted since the pop is newer — keep it.
+                    batch = self._pending.setdefault(data_id, {})
+                    for p, data in pages.items():
+                        if p not in batch:
+                            batch[p] = data
+                            self._n_pending += 1
+                self._cv.notify_all()
+
+    # ----------------------------------------------------------- frontend
+    def _raise_pending_error(self) -> None:
+        # caller holds the lock
+        if self._error is not None:
+            err, self._error, self._error_id = self._error, None, None
+            self._cv.notify_all()      # un-pause the worker (it retries)
+            raise WriteBehindError("async write-back failed") from err
+
+    def submit(self, data_id: str, pages: Dict[int, bytes]) -> int:
+        """Queue dirty pages (newest bytes win per page). Blocks only when
+        the queue is at max_pages (backpressure). Returns 0 — the actual
+        write is accounted by the drain thread when the batch retires.
+
+        Never raises a captured write-back failure: submit runs inside
+        eviction paths (including on prefetch workers, where a raise would
+        be mistaken for a read error and the pending error lost) — the
+        durability barrier that surfaces failures is `drain()`. While an
+        error is pending the worker is paused, so backpressure is waived
+        (the queue may overshoot max_pages) — blocking here would deadlock
+        against the very flush that clears the error."""
+        if not pages:
+            return 0
+        with self._cv:
+            while (self._n_pending >= self.max_pages
+                   and self._error is None and not self._shutdown):
+                self._cv.wait()
+            batch = self._pending.setdefault(data_id, {})
+            for p, data in pages.items():
+                if p not in batch:
+                    self._n_pending += 1
+                batch[p] = data
+            self.max_depth_pages = max(self.max_depth_pages,
+                                       self.pending_pages_locked())
+            self._cv.notify_all()
+        return 0
+
+    def pending_pages_locked(self) -> int:
+        # caller holds the lock
+        n = self._n_pending
+        if self._inflight is not None:
+            n += len(self._inflight[1])
+        return n
+
+    def pending_pages(self) -> int:
+        with self._lock:
+            return self.pending_pages_locked()
+
+    def empty(self) -> bool:
+        """Lock-free emptiness probe for hot read paths. Safe as a
+        lookup-skip: an eviction publishes its queue insert *before*
+        releasing the page-cache lock, so any reader whose cache lookup
+        already missed is guaranteed to observe a non-empty queue here;
+        and a just-retired batch is on disk, so reading disk is fresh."""
+        return self._n_pending == 0 and self._inflight is None
+
+    def lookup(self, data_id: str, page: int) -> Optional[bytes]:
+        """Newest not-yet-retired bytes for a page, or None. Pending beats
+        in-flight (a resubmission after the batch was popped is newer)."""
+        with self._lock:
+            batch = self._pending.get(data_id)
+            if batch is not None and page in batch:
+                return batch[page]
+            if self._inflight is not None and self._inflight[0] == data_id:
+                return self._inflight[1].get(page)
+            return None
+
+    def discard(self, data_id: str) -> None:
+        """Drop queued pages of a file about to be deleted; waits out an
+        in-flight batch so the writer never races the unlink. An error
+        captured for this file dies with it — it must not pause the
+        worker or fail a later unrelated drain."""
+        with self._cv:
+            while True:     # an in-flight batch that fails re-queues itself
+                batch = self._pending.pop(data_id, None)
+                if batch:
+                    self._n_pending -= len(batch)
+                if self._error_id == data_id:
+                    self._error, self._error_id = None, None
+                self._cv.notify_all()
+                if (self._inflight is None
+                        or self._inflight[0] != data_id):
+                    return
+                self._cv.wait()
+
+    def drain(self) -> None:
+        """Durability barrier: block until the queue is empty and the last
+        batch retired; re-raise any captured write-back failure. A failed
+        batch stays queued (still served by lookup) and is retried once
+        the error has been surfaced here."""
+        with self._cv:
+            while self._pending or self._inflight is not None:
+                if self._error is not None:
+                    break
+                self._cv.wait()
+            self._raise_pending_error()
+
+    def stats_dict(self) -> dict:
+        with self._lock:
+            return {"pages_retired": self.pages_retired,
+                    "bytes_retired": self.bytes_retired,
+                    "batches_retired": self.batches_retired,
+                    "max_depth_pages": self.max_depth_pages,
+                    "pending_pages": self.pending_pages_locked()}
+
+    def close(self) -> None:
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        self._thread.join(timeout=10)

@@ -1,115 +1,183 @@
-"""Async prefetcher — overlap SSD page reads with JAX compute.
+"""Multi-worker readahead scheduler — overlap SSD page reads with compute.
 
 FlashGraph's contribution (and this paper's §3.4.2/§3.4.3) is that SEM
 performance lives or dies on overlapping disk with compute: while the
 eigensolver contracts one group of subspace blocks, SAFS should already be
-streaming the *next* group's pages. This module is that double buffer:
+streaming the *next* groups' pages. PR 2's version of this module was a
+single-worker double buffer (one dispatch thread, one group ahead); this is
+the full readahead scheduler the paper's SAFS actually runs:
 
-  * `schedule(data_ids)` enqueues whole-file page reads on a daemon worker
-    thread; the worker fills the shared PageCache with clean lines (it
-    never dirties pages — prefetch is read-only);
+  * `schedule(data_ids)` enqueues whole-file batched page reads on a pool
+    of `io_workers` daemon threads (each read is one `read_pages_batch`
+    in the backend — coalesced preadv runs, not a python page loop);
+    the queue is bounded by `depth` files — the readahead window. Ids
+    past the window are *dropped*, not queued: the caller re-announces
+    its access pattern every group (`MultiVector._prefetch_group`), so a
+    dropped id is simply re-offered when the window has advanced. This
+    bounds both queue memory and cache thrash from overly deep readahead;
+  * workers fill the shared PageCache with clean lines only (prefetch is
+    read-only — it never dirties a page);
   * the consumer calls `wait(data_id)` (the backend does, inside `load`)
-    before using a file; time the consumer actually blocks there is the
-    *un*-overlapped remainder;
-  * overlap accounting: `overlap_seconds() = busy_seconds - wait_seconds`,
-    the disk time hidden behind compute — `bench_safs.py` reports it and
-    the acceptance bar is that it is nonzero.
-
-One worker is enough: a single NVMe stream already saturates the emulated
-tier, and the paper's prefetcher likewise issues from one dispatch thread
-per file (§3.4.2).
+    before using a file; the time actually blocked there is the
+    *un*-overlapped remainder. A reader exception is captured and
+    re-raised from `wait` (as `PrefetchError`), and a dead worker pool is
+    detected rather than waited on forever — `wait` never hangs;
+  * overlap accounting: `overlap_seconds() = busy_seconds - wait_seconds`
+    where busy sums reader wall time across workers (it can exceed
+    wall-clock when io_workers > 1) — the disk time hidden behind
+    compute. `bench_safs.py` reports it and the derived overlap fraction.
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
-from typing import Callable, Dict, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, Optional
+
+
+class PrefetchError(RuntimeError):
+    """A background reader failed; re-raised at the consumer's wait()."""
 
 
 class Prefetcher:
-    """Single-worker async page reader over a shared PageCache.
+    """Multi-worker readahead scheduler over a shared PageCache.
 
     `reader(data_id) -> int` performs the actual cache fill for one file
     and returns bytes read from disk (the backend provides it; it skips
-    pages already resident).
+    pages already resident and batches the rest into vectored runs).
+
+    io_workers: reader threads issuing concurrent fills (NVMe wants queue
+        depth; one python thread per in-flight file works the GIL because
+        preadv releases it).
+    depth: readahead window — max files queued beyond the ones in flight.
     """
 
-    def __init__(self, reader: Callable[[str], int]):
+    def __init__(self, reader: Callable[[str], int], *,
+                 io_workers: int = 2, depth: int = 8):
         self._reader = reader
-        self._q: "queue.Queue[Optional[str]]" = queue.Queue()
-        self._done: Dict[str, threading.Event] = {}
+        self.io_workers = max(1, int(io_workers))
+        self.depth = max(1, int(depth))
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: Deque[str] = deque()
+        self._done: Dict[str, threading.Event] = {}
+        self._errors: Dict[str, BaseException] = {}
+        self._shutdown = False
         self.busy_seconds = 0.0
         self.wait_seconds = 0.0
         self.bytes_prefetched = 0
         self.files_prefetched = 0
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
+        self.files_dropped = 0      # offered past the readahead window
+        self.read_errors = 0
+        self._threads = [threading.Thread(target=self._run, daemon=True,
+                                          name=f"safs-ra-{i}")
+                         for i in range(self.io_workers)]
+        for t in self._threads:
+            t.start()
 
-    # ------------------------------------------------------------- worker
+    # ------------------------------------------------------------- workers
     def _run(self) -> None:
         while True:
-            data_id = self._q.get()
-            if data_id is None:
-                return
-            with self._lock:
+            with self._cv:
+                while not self._pending and not self._shutdown:
+                    self._cv.wait()
+                if self._shutdown and not self._pending:
+                    return
+                data_id = self._pending.popleft()
                 ev = self._done.get(data_id)
             t0 = time.perf_counter()
+            err: Optional[BaseException] = None
+            n = 0
             try:
                 n = self._reader(data_id)
-                with self._lock:
+            except BaseException as e:   # captured, re-raised at wait()
+                err = e
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.busy_seconds += dt
+                if err is None:
                     self.bytes_prefetched += n
                     self.files_prefetched += 1
-            except Exception:      # a failed prefetch is only a lost overlap
-                pass
-            finally:
-                with self._lock:
-                    self.busy_seconds += time.perf_counter() - t0
-                if ev is not None:
-                    ev.set()
+                else:
+                    self._errors[data_id] = err
+                    self.read_errors += 1
+            if ev is not None:
+                ev.set()
 
     # ----------------------------------------------------------- frontend
     def schedule(self, data_ids) -> None:
-        """Enqueue background reads; ignores ids already in flight."""
-        for d in data_ids:
-            with self._lock:
-                if d in self._done and not self._done[d].is_set():
+        """Announce upcoming reads. Ids already in flight are ignored; ids
+        past the `depth` readahead window are dropped (re-offer later)."""
+        with self._cv:
+            for d in data_ids:
+                ev = self._done.get(d)
+                if ev is not None and not ev.is_set():
+                    continue             # already queued or in flight
+                if len(self._pending) >= self.depth:
+                    self.files_dropped += 1
                     continue
+                self._errors.pop(d, None)
                 self._done[d] = threading.Event()
-            self._q.put(d)
+                self._pending.append(d)
+            self._cv.notify_all()
 
-    def wait(self, data_id: str) -> float:
+    def wait(self, data_id: str, *, poll: float = 0.2) -> float:
         """Block until an in-flight prefetch of data_id completes (no-op if
-        never scheduled). Returns (and accounts) the seconds blocked."""
+        never scheduled). Returns (and accounts) the seconds blocked.
+
+        Never hangs on a dead pool: if every worker thread has exited while
+        the read is still unfinished, raises PrefetchError; a reader
+        exception captured by the worker is chained and re-raised here.
+        """
         with self._lock:
             ev = self._done.get(data_id)
         if ev is None:
             return 0.0
         t0 = time.perf_counter()
-        ev.wait()
+        while not ev.wait(poll):
+            if not any(t.is_alive() for t in self._threads):
+                with self._lock:
+                    self.wait_seconds += time.perf_counter() - t0
+                    self._done.pop(data_id, None)
+                raise PrefetchError(
+                    f"prefetch workers died with {data_id!r} unfinished")
         dt = time.perf_counter() - t0
         with self._lock:
             self.wait_seconds += dt
             self._done.pop(data_id, None)
+            err = self._errors.pop(data_id, None)
+        if err is not None:
+            raise PrefetchError(f"prefetch of {data_id!r} failed") from err
         return dt
 
-    def drain(self) -> None:
-        """Wait for everything in flight (benchmark epilogue)."""
+    def drain(self, *, ignore_errors: bool = True) -> None:
+        """Wait for everything in flight (benchmark/flush epilogue)."""
         for d in list(self._done):
-            self.wait(d)
+            try:
+                self.wait(d)
+            except PrefetchError:
+                if not ignore_errors:
+                    raise
 
     def overlap_seconds(self) -> float:
         """Disk-read time hidden behind foreground compute."""
         return max(0.0, self.busy_seconds - self.wait_seconds)
 
     def stats(self) -> dict:
-        return {"busy_seconds": self.busy_seconds,
-                "wait_seconds": self.wait_seconds,
-                "overlap_seconds": self.overlap_seconds(),
-                "bytes_prefetched": self.bytes_prefetched,
-                "files_prefetched": self.files_prefetched}
+        with self._lock:
+            return {"busy_seconds": self.busy_seconds,
+                    "wait_seconds": self.wait_seconds,
+                    "overlap_seconds": self.overlap_seconds(),
+                    "bytes_prefetched": self.bytes_prefetched,
+                    "files_prefetched": self.files_prefetched,
+                    "files_dropped": self.files_dropped,
+                    "read_errors": self.read_errors,
+                    "io_workers": self.io_workers,
+                    "depth": self.depth}
 
     def close(self) -> None:
-        self._q.put(None)
-        self._thread.join(timeout=5)
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5)

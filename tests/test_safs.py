@@ -12,7 +12,9 @@ import numpy as np
 import pytest
 
 from repro.core import MultiVector, TieredStore, DEVICE, HOST
-from repro.safs import CrashPoint, PageCache, PageFile, SafsBackend
+from repro.safs import (CrashPoint, PageCache, PageFile, PrefetchError,
+                        Prefetcher, SafsBackend, WriteBehind,
+                        WriteBehindError, coalesce_runs)
 from repro.ckpt import checkpoint as ck
 
 pytestmark = pytest.mark.disk
@@ -72,6 +74,31 @@ def test_crash_before_journal_commit_keeps_old_pages(disk_tmp):
     pf2.close()
 
 
+# --------------------------------------------------------- batched/vectored
+def test_coalesce_runs_merges_adjacent_and_dedups():
+    assert coalesce_runs([]) == []
+    assert coalesce_runs([3]) == [(3, 1)]
+    assert coalesce_runs([5, 0, 1, 2, 7, 6, 2]) == [(0, 3), (5, 3)]
+
+
+def test_read_pages_batch_matches_per_page_reads(disk_tmp):
+    """The vectored engine returns byte-identical pages to the PR-2
+    single-pread path, across runs longer than one iovec batch."""
+    path = os.path.join(disk_tmp, "b.pages")
+    arr = np.random.default_rng(0).standard_normal(70000).astype(np.float32)
+    pf = PageFile(path, page_size=4096, shape=arr.shape, dtype="float32")
+    pf.write_pages(pf.split(arr))
+    idxs = [0, 1, 2, 40, 41, 5, pf.n_pages - 1]
+    got = pf.read_pages_batch(idxs)
+    assert sorted(got) == sorted(set(idxs))
+    for i in got:
+        assert got[i] == pf.read_page(i)
+    # whole-file batch assembles back to the array
+    np.testing.assert_array_equal(
+        pf.assemble(pf.read_pages_batch(pf.page_indices())), arr)
+    pf.delete()
+
+
 # --------------------------------------------------------------- page cache
 def _cache(capacity_pages=4, page_size=64):
     written = []
@@ -120,15 +147,19 @@ def test_cache_flush_batches_per_file():
 
 
 # ----------------------------------------------------- backend equivalence
-def _twin_mvs(disk_tmp, n=384, widths=(4, 4, 2), seed=0, cache_pages=2):
-    """Identical MultiVectors on ram and safs stores (+ the dense oracle)."""
+def _twin_mvs(disk_tmp, n=384, widths=(4, 4, 2), seed=0, cache_pages=2,
+              sub="pages"):
+    """Identical MultiVectors on ram and safs stores (+ the dense oracle).
+    Each call gets its own page-store root (`sub`): a SafsBackend owns its
+    root exclusively — two live backends over one directory would race
+    recovery against each other's async write-behind."""
     rng = np.random.default_rng(seed)
     blocks = [rng.standard_normal((n, w)).astype(np.float32)
               for w in widths]
     ram = MultiVector(TieredStore(), n, group_size=2, impl="ref")
     safs = MultiVector(
         TieredStore(backend="safs",
-                    backend_opts={"root": os.path.join(disk_tmp, "pages"),
+                    backend_opts={"root": os.path.join(disk_tmp, sub),
                                   "cache_bytes": cache_pages * 4096}),
         n, group_size=2, impl="ref")
     for b in blocks:
@@ -157,7 +188,7 @@ def test_backend_equivalence_all_eleven_ops(disk_tmp):
     both(lambda mv: mv.mv_times_mat(small))
     both(lambda mv: mv.mv_trans_mv(other, alpha=1.5))
     other_mv_r, other_mv_s, _ = _twin_mvs(disk_tmp, n=n, widths=(4, 4, 2),
-                                          seed=7)
+                                          seed=7, sub="pages2")
     np.testing.assert_array_equal(np.asarray(ram.mv_dot(other_mv_r)),
                                   np.asarray(safs.mv_dot(other_mv_s)))
     both(lambda mv: mv.mv_norm())
@@ -203,6 +234,9 @@ def test_safs_streams_from_disk_under_tiny_cache(disk_tmp):
     blocks = [rng.standard_normal((n, w)).astype(np.float32) for w in widths]
     for b in blocks:
         mv.append_block(jnp.asarray(b))
+    # drain the write-behind queue: otherwise its victim buffer (legally)
+    # serves the evicted pages and no read ever needs the medium
+    store.flush()
     dense = np.concatenate(blocks, axis=1)
     small = rng.standard_normal((16, 3)).astype(np.float32)
     out = np.asarray(mv.mv_times_mat(jnp.asarray(small)))
@@ -244,6 +278,164 @@ def test_prefetch_staging_is_correct_and_counted(disk_tmp):
     assert store.backend.prefetcher.stats()["files_prefetched"] >= 1
     for k, a in arrs.items():
         np.testing.assert_array_equal(np.asarray(store.get(k)), a)
+    store.close()
+
+
+def test_prefetch_wait_propagates_reader_exception(disk_tmp):
+    """A reader that dies mid-read must surface at wait(), not hang the
+    consumer (PR-2's worker swallowed the exception silently)."""
+    calls = []
+
+    def reader(data_id):
+        calls.append(data_id)
+        if data_id == "bad":
+            raise IOError("device gone")
+        return 7
+
+    pf = Prefetcher(reader, io_workers=1, depth=4)
+    pf.schedule(["ok", "bad"])
+    assert pf.wait("ok") >= 0.0
+    with pytest.raises(PrefetchError):
+        pf.wait("bad")
+    assert pf.stats()["read_errors"] == 1
+    # a re-offer after the failure is accepted again (error state cleared)
+    pf.schedule(["bad"])
+    with pytest.raises(PrefetchError):
+        pf.wait("bad")
+    pf.close()
+
+
+def test_prefetch_wait_detects_dead_worker_pool():
+    """wait() on a pool whose workers have exited raises instead of
+    blocking forever (the satellite's hang case)."""
+    pf = Prefetcher(lambda d: 0, io_workers=1, depth=2)
+    with pf._cv:                      # simulate a crashed worker thread
+        pf._done["never"] = __import__("threading").Event()
+    pf.close()                        # workers exit; "never" still unset
+    with pytest.raises(PrefetchError):
+        pf.wait("never", poll=0.01)
+
+
+def test_prefetch_depth_bounds_queue():
+    """Ids offered past the readahead window are dropped, not queued."""
+    import threading
+    gate = threading.Event()
+    pf = Prefetcher(lambda d: gate.wait(5) and 0, io_workers=1, depth=2)
+    pf.schedule([f"f{i}" for i in range(8)])   # 1 in flight + 2 queued max
+    st = pf.stats()
+    assert st["files_dropped"] >= 5
+    gate.set()
+    pf.drain()
+    pf.close()
+
+
+# ------------------------------------------------------------ write-behind
+def test_write_behind_ack_survives_kill_mid_demotion(disk_tmp):
+    """Kill mid-demotion with a populated write-behind queue: every *acked*
+    page (journal committed for its batch) must be recovered by journal
+    replay on reopen; un-acked queued pages are simply lost (the sync
+    barrier is flush/drain, which the kill precedes)."""
+    path = os.path.join(disk_tmp, "wb.pages")
+    old = np.zeros((128, 32), np.float32)
+    new = np.full((128, 32), 9.0, np.float32)
+    pf = PageFile(path, page_size=4096, shape=old.shape, dtype="float32")
+    pf.write_pages(pf.split(old))
+
+    # the drain thread's journaled writer dies after the journal committed
+    # but mid in-place patch — the acked-but-torn state of a real kill
+    def writer(data_id, pages):
+        return pf.write_pages(pages, crash_after_pages=1)
+
+    wb = WriteBehind(writer, max_pages=1024)
+    wb.submit("wb", pf.split(new))            # demotion enters the queue
+    with pytest.raises(WriteBehindError) as ei:
+        wb.drain()
+    assert isinstance(ei.value.__cause__, CrashPoint)
+    wb.close()
+    pf.close()
+
+    pf2 = PageFile(path)    # process restart: replay the committed journal
+    got = pf2.assemble({i: pf2.read_page(i) for i in pf2.page_indices()})
+    np.testing.assert_array_equal(got, new)   # every acked page recovered
+    assert not os.path.exists(path + ".journal")
+    pf2.delete()
+
+
+def test_write_behind_serves_queued_pages_and_orders_rewrites(disk_tmp):
+    """The queue is a victim buffer: evicted-but-unwritten pages are served
+    by lookup (never stale disk bytes), and a page resubmitted with newer
+    bytes retires with the newer bytes."""
+    import threading
+    path = os.path.join(disk_tmp, "vb.pages")
+    arr = np.arange(2048, dtype=np.float32)
+    pf = PageFile(path, page_size=4096, shape=arr.shape, dtype="float32")
+    gate = threading.Event()
+
+    def slow_writer(data_id, pages):
+        gate.wait(5)
+        return pf.write_pages(pages)
+
+    wb = WriteBehind(slow_writer, max_pages=64)
+    pages_v1 = pf.split(arr)
+    pages_v2 = pf.split(arr + 100.0)
+    wb.submit("vb", pages_v1)
+    wb.submit("vb", pages_v2)      # newer bytes for the same pages
+    assert wb.lookup("vb", 0) == pages_v2[0]   # newest wins pre-retire
+    assert wb.lookup("vb", 99) is None
+    gate.set()
+    wb.drain()
+    assert wb.lookup("vb", 0) is None          # retired: disk is current
+    np.testing.assert_array_equal(
+        pf.assemble({i: pf.read_page(i) for i in pf.page_indices()}),
+        arr + 100.0)
+    wb.close()
+    pf.delete()
+
+
+def test_backend_read_your_evictions_via_write_behind(disk_tmp):
+    """End-to-end: a dirty block evicted from a tiny cache into the
+    write-behind queue reads back its newest bytes immediately."""
+    store = TieredStore(backend="safs", backend_opts={
+        "root": os.path.join(disk_tmp, "rye"), "cache_bytes": 2 * 4096})
+    a = np.random.default_rng(1).standard_normal((600, 4)).astype(np.float32)
+    b = np.random.default_rng(2).standard_normal((600, 4)).astype(np.float32)
+    store.put("x", jnp.asarray(a), tier=HOST)
+    store.put("y", jnp.asarray(b), tier=HOST)   # evicts x's dirty pages
+    np.testing.assert_array_equal(np.asarray(store.get("x")), a)
+    np.testing.assert_array_equal(np.asarray(store.get("y")), b)
+    store.close()
+
+
+# --------------------------------------------------- SSD-streamed SpMM image
+def test_graph_operator_streams_image_from_safs(disk_tmp, small_graph):
+    """stream_image=True spills the edge tiles into the page store and
+    matmat reproduces the RAM-resident operator exactly while the tier
+    accounts the streamed image reads."""
+    from repro.graphs import pack_tiles
+    from repro.core import GraphOperator
+    n, r, c, v, a = small_graph
+    tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    store = TieredStore(backend="safs", backend_opts={
+        "root": os.path.join(disk_tmp, "img"), "cache_bytes": 8 * 4096})
+    op_stream = GraphOperator(tm, store=store, impl="ref",
+                              stream_image=True, image_chunk_bytes=1 << 16)
+    # drain the write-behind queue: until the spilled chunks retire, its
+    # victim buffer (legally) serves every miss and no read needs the disk
+    store.flush()
+    op_ram = GraphOperator(tm, impl="ref")
+    x = jnp.asarray(np.random.default_rng(3)
+                    .standard_normal((tm.shape[0], 4)), jnp.float32)
+    y_stream = np.asarray(op_stream.matmat(x))
+    np.testing.assert_allclose(y_stream, np.asarray(op_ram.matmat(x)),
+                               rtol=1e-6, atol=1e-6)
+    r0 = store.stats.host_bytes_read
+    assert r0 > 0                         # image chunks counted as reads
+    assert store.backend.stats.host_bytes_read > 0   # really hit the medium
+    np.testing.assert_allclose(np.asarray(op_stream.matmat(x)), y_stream,
+                               rtol=0, atol=0)
+    assert store.stats.host_bytes_read > r0   # re-streamed per matmat
+    op_stream.delete_image()
+    assert not [d for d in store.backend.data_ids() if "tiles" in d]
     store.close()
 
 
