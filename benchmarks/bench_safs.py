@@ -23,7 +23,15 @@ the I/O-path perf trajectory from PR 3 onward:
                    (Table 3 endurance argument); also reports the
                    write-behind queue's high-water depth.
   safs_cache       page-cache hit rate for the reorthogonalization
-                   re-read pattern (most-recent-block pinning, §3.4.4).
+                   re-read pattern (most-recent-block pinning, §3.4.4):
+                   the CGS2 append→4×re-scan cycle run twice, once with
+                   the pin lifecycle engaged and once with the cache
+                   degraded to plain LRU (`pin_pages=False`). The pinned
+                   rate must sit well above the LRU-only baseline — a
+                   sequential scan larger than the cache is exactly LRU's
+                   pathological flood, and the pin is what keeps the
+                   newest on-disk block (the one re-read four times per
+                   expansion) resident through it.
 """
 from __future__ import annotations
 
@@ -50,7 +58,8 @@ def _mk(store, n, m, b, group_size=2):
     return mv
 
 
-def _safs_store(root, n, b, *, enable_prefetch, page_size=4096):
+def _safs_store(root, n, b, *, enable_prefetch, page_size=4096,
+                pin_pages=True):
     # cache holds ~3 blocks of a >8-block subspace: genuinely streaming.
     # 4 KiB pages are affordable now that reads go through coalesced
     # preadv runs instead of a python per-page loop (see read_throughput).
@@ -58,7 +67,8 @@ def _safs_store(root, n, b, *, enable_prefetch, page_size=4096):
         device_budget_bytes=2 * n * 4 * b, backend="safs",
         backend_opts={"root": root, "cache_bytes": 3 * n * 4 * b,
                       "page_size": page_size,
-                      "enable_prefetch": enable_prefetch})
+                      "enable_prefetch": enable_prefetch,
+                      "pin_pages": pin_pages})
 
 
 # ------------------------------------------------------------ throughput
@@ -185,12 +195,45 @@ def collect(*, smoke: bool = False) -> dict:
             "write_behind": wb.stats_dict() if wb is not None else None,
         }
 
-        # reorth re-read pattern: newest block re-read right after demote
+        # endurance store's own lookup mix (compress pass; LRU-dominated —
+        # pinning cannot help a pattern that never re-reads its newest
+        # block, which is why the pre-fix bench sat at 0.017 here)
         d = store.backend.stats
-        out["safs_cache"] = {
-            "page_hit_rate": d.cache_hits / max(d.cache_hits
-                                                + d.cache_misses, 1)}
+        compress_rate = d.cache_hits / max(d.cache_hits + d.cache_misses, 1)
         store.close()
+
+        # reorth re-read pattern (§3.4.4): per expansion the newest block
+        # is appended (demoting its predecessor to disk) and the whole
+        # subspace is re-scanned four times by the CGS2 passes — the
+        # just-demoted block is the only one LRU is guaranteed to flood
+        # out right before it is needed. Measured with the pin lifecycle
+        # engaged vs the cache degraded to plain LRU.
+        def reorth_hit_rate(tag, pin_pages):
+            store = _safs_store(os.path.join(root, tag), n, b,
+                                enable_prefetch=False, pin_pages=pin_pages)
+            rng = np.random.default_rng(3)
+            mv = MultiVector(store, n, group_size=2, impl="ref")
+            for _ in range(m // b):
+                mv.append_block(jnp.asarray(
+                    rng.standard_normal((n, b)), jnp.float32))
+                w = jnp.asarray(rng.standard_normal((n, b)), jnp.float32)
+                hc = mv.mv_trans_mv(w)
+                w = w - mv.mv_times_mat(hc)
+                h2 = mv.mv_trans_mv(w)
+                w = w - mv.mv_times_mat(h2)
+            d = store.backend.stats
+            rate = d.cache_hits / max(d.cache_hits + d.cache_misses, 1)
+            store.close()
+            return rate
+
+        pinned = reorth_hit_rate("cache_pinned", True)
+        lru_only = reorth_hit_rate("cache_lru", False)
+        out["safs_cache"] = {
+            "page_hit_rate": pinned,
+            "lru_only_hit_rate": lru_only,
+            "pinned_over_lru": pinned / max(lru_only, 1e-9),
+            "compress_pass_hit_rate": compress_rate,
+        }
     finally:
         shutil.rmtree(root, ignore_errors=True)
     return out
@@ -212,7 +255,8 @@ def run(csv_rows: list):
                      f"disk_over_logical_writes="
                      f"{e['disk_over_logical_writes']:.2f}"))
     csv_rows.append(("safs_cache", "m=64", 0.0,
-                     f"page_hit_rate={m['safs_cache']['page_hit_rate']:.2f}"))
+                     f"page_hit_rate={m['safs_cache']['page_hit_rate']:.2f},"
+                     f"lru_only={m['safs_cache']['lru_only_hit_rate']:.2f}"))
     return csv_rows
 
 
@@ -225,7 +269,9 @@ def main():
         "results", "BENCH_safs.json"))
     args = ap.parse_args()
     metrics = collect(smoke=args.smoke)
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(metrics, f, indent=2)
     r4 = metrics["read_throughput"]["4096"]
@@ -240,6 +286,10 @@ def main():
     wb = metrics["safs_endurance"]["write_behind"]
     if wb:
         print(f"write-behind peak queue depth: {wb['max_depth_pages']} pages")
+    sc = metrics["safs_cache"]
+    print(f"reorth page hit rate: {sc['page_hit_rate']:.3f} pinned vs "
+          f"{sc['lru_only_hit_rate']:.3f} LRU-only "
+          f"({sc['pinned_over_lru']:.1f}x)")
 
 
 if __name__ == "__main__":

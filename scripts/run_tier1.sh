@@ -34,6 +34,24 @@ echo "disk subset TMPDIR footprint: $(du -sh "$DISK_TMP" | cut -f1)"
 
 # Smoke-sized SAFS I/O-path benchmark: refreshes results/BENCH_safs.json
 # (pages/s at 4 KiB / 64 KiB, prefetch overlap fraction, write-behind
-# queue depth) so the perf trajectory is tracked from PR 3 onward.
+# queue depth, reorth page-cache hit rate vs LRU-only) so the perf
+# trajectory is tracked from PR 3 onward.
 echo "== bench_safs smoke (results/BENCH_safs.json) =="
 TMPDIR="$DISK_TMP" python benchmarks/bench_safs.py --smoke
+
+# Smoke-sized end-to-end sharded eigensolve (PR 4): core restart loop
+# driving the fused dist step on a forced 8-device mesh. The bench
+# self-validates (non-zero exit when parity fails); the explicit check
+# below additionally fails the tier if the archived JSON is missing the
+# parity / eigenvalue / pod-compressed fields.
+echo "== bench_dist_e2e smoke (results/BENCH_dist_e2e.json) =="
+python benchmarks/bench_dist_e2e.py --smoke
+python - <<'EOF'
+import json
+from benchmarks.bench_dist_e2e import validate
+with open("results/BENCH_dist_e2e.json") as f:
+    metrics = json.load(f)
+validate(metrics)
+print("BENCH_dist_e2e.json: parity/eigenvalue fields present, "
+      f"max_rel_err={metrics['parity']['max_rel_err']:.3e}")
+EOF

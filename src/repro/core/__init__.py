@@ -1,5 +1,6 @@
 """FlashEigen-JAX core: out-of-core block eigensolver (the paper's contribution)."""
-from repro.core.tiered import TieredStore, IOStats, DEVICE, HOST
+from repro.core.tiered import (TieredStore, IOStats, DEVICE, HOST,
+                               ReadOnlyError)
 from repro.core.multivector import MultiVector
 from repro.core.ortho import cholqr, svqb, bcgs2, ortho_error
 from repro.core.operator import (GraphOperator, NormalOperator, DenseOperator,
@@ -10,7 +11,8 @@ from repro.core.svd import svds, SvdResult
 from repro.core.residuals import EigResult, true_residuals
 
 __all__ = [
-    "TieredStore", "IOStats", "DEVICE", "HOST", "MultiVector",
+    "TieredStore", "IOStats", "DEVICE", "HOST", "ReadOnlyError",
+    "MultiVector",
     "cholqr", "svqb", "bcgs2", "ortho_error",
     "GraphOperator", "NormalOperator", "DenseOperator", "HvpOperator",
     "LinearOperator", "eigsh", "lanczos_eigsh", "svds", "SvdResult",

@@ -33,15 +33,30 @@ from repro.kernels import ops as kops
 
 def _expand(op, v: MultiVector, q: jnp.ndarray, h: np.ndarray,
             impl: kops.Impl) -> tuple[jnp.ndarray, np.ndarray, np.ndarray]:
-    """One block expansion. Appends q to V; returns (q_next, new H, R_next)."""
+    """One block expansion. Appends q to V; returns (q_next, new H, R_next).
+
+    Two paths produce the identical Krylov invariant A·q = V·h + q_next·r:
+
+      * local: semi-external SpMM then two grouped CGS passes over the
+        out-of-core subspace, then CholQR — four streamed re-reads of V;
+      * fused (operator advertises `supports_fused_expand`, e.g. the
+        sharded `dist.DistOperator`): one combined SpMM+CGS2/CholQR2 step
+        over the operator's device-resident subspace shards — V's blocks
+        are *not* re-read from the store at all; the MultiVector is the
+        spill/restart copy (the paper's "subspace on SSD, recent matrix
+        cached in fast memory" split).
+    """
     b = q.shape[1]
     v.append_block(q)
-    w = op.matmat(q)                                   # semi-external SpMM
-    h_col = v.mv_trans_mv(w)                           # VᵀAQ (m_new, b)
-    w = w - v.mv_times_mat(h_col)
-    h2 = v.mv_trans_mv(w)                              # CGS2 second pass
-    w = w - v.mv_times_mat(h2)
-    q_next, r_next = cholqr(w, impl=impl)
+    if getattr(op, "supports_fused_expand", False):
+        q_next, h_col, r_next = op.fused_expand(v, q)
+    else:
+        w = op.matmat(q)                               # semi-external SpMM
+        h_col = v.mv_trans_mv(w)                       # VᵀAQ (m_new, b)
+        w = w - v.mv_times_mat(h_col)
+        h2 = v.mv_trans_mv(w)                          # CGS2 second pass
+        w = w - v.mv_times_mat(h2)
+        q_next, r_next = cholqr(w, impl=impl)
 
     m_old = h.shape[0]
     m_new = m_old + b

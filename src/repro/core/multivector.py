@@ -75,6 +75,12 @@ class MultiVector:
     def block_widths(self) -> List[int]:
         return [b.ncols for b in self._blocks]
 
+    def block_names(self) -> List[str]:
+        """Store names of the blocks, in column order (stable identity —
+        operators mirroring the subspace on-device key their shard cache
+        on these)."""
+        return [b.name for b in self._blocks]
+
     def _block_name(self, i: int) -> str:
         return self._blocks[i].name
 
@@ -97,7 +103,10 @@ class MultiVector:
 
     def append_block(self, arr: jnp.ndarray, *, pin_recent: bool = True) -> None:
         """Append a new rightmost block; pins it (most-recent-block cache)
-        and demotes the previously pinned block to the host tier."""
+        and demotes the previously pinned block to the host tier, pinning
+        the demoted block's pages in the backend page cache (§3.4.4: it is
+        the newest on-"SSD" matrix, about to be re-read four times by the
+        CGS2 passes) until the next append supersedes it."""
         assert arr.shape[0] == self.n, (arr.shape, self.n)
         idx = len(self._blocks)
         name = f"{self.name}/b{idx}"
@@ -107,6 +116,7 @@ class MultiVector:
                 prev = self._blocks[-1].name
                 self.store.unpin(prev)
                 self.store.demote(prev)
+                self.store.host_pin(prev)
             self.store.pin(name)
         self._blocks.append(_Block(name, int(arr.shape[1])))
 

@@ -110,9 +110,11 @@ class GraphOperator:
         self._readahead = int(readahead)
         self._chunks: List[_ImageChunk] = []
         row_ptr = np.asarray(tm.row_ptr)
+        # readonly: the streamed image has no per-chunk dirty tracking, so
+        # writing through a chunk name must raise, not silently diverge
         for k, (r0, r1, b0, b1) in enumerate(tm.chunk_block_rows(chunk_bytes)):
             cname = f"{self._name}/tiles/c{k}"
-            self.store.put(cname, tm.blocks[b0:b1], tier=HOST)
+            self.store.put(cname, tm.blocks[b0:b1], tier=HOST, readonly=True)
             sub_ptr = row_ptr[r0:r1 + 1]
             self._chunks.append(_ImageChunk(
                 name=cname, n_block_rows=r1 - r0,
@@ -123,9 +125,11 @@ class GraphOperator:
                     kops.empty_row_mask(sub_ptr, self._bm))))
         self._has_coo = tm.coo_vals.size > 0
         if self._has_coo:
-            self.store.put(f"{self._name}/coo_rows", tm.coo_rows, tier=HOST)
-            self.store.put(f"{self._name}/coo_cols", tm.coo_cols, tier=HOST)
-            self.store.put(f"{self._name}/coo_vals", tm.coo_vals, tier=HOST)
+            for part, arr in (("coo_rows", tm.coo_rows),
+                              ("coo_cols", tm.coo_cols),
+                              ("coo_vals", tm.coo_vals)):
+                self.store.put(f"{self._name}/{part}", arr, tier=HOST,
+                               readonly=True)
 
     def _matmat_streamed(self, x: jnp.ndarray) -> jnp.ndarray:
         from repro.kernels.spmm_ref import coo_spmm_ref
@@ -180,12 +184,47 @@ class GraphOperator:
 
 class NormalOperator:
     """AᵀA (or AAᵀ) for SVD on directed graphs. Requires the transpose
-    image (packed once, offline — the paper builds both images too)."""
+    image (packed once, offline — the paper builds both images too).
+
+    Both constituent images follow the streamed-image machinery: build via
+    `from_tiles(..., stream_image=True)` to spill *both* the forward and
+    transpose edge tiles into the page store (an SVD solve otherwise
+    silently keeps two full images in RAM), and `delete_image()` drops
+    both spills when the solve is done."""
 
     def __init__(self, a_op: GraphOperator, at_op: GraphOperator):
         self.a = a_op
         self.at = at_op
         self.n = at_op.n
+
+    @classmethod
+    def from_tiles(cls, tm_a: TiledMatrix, tm_at: TiledMatrix, *,
+                   store: TieredStore | None = None,
+                   impl: kops.Impl = "auto", stream_image: bool = False,
+                   image_chunk_bytes: int = 4 << 20,
+                   image_readahead: int = 2,
+                   name: str | None = None) -> "NormalOperator":
+        """Build both GraphOperators with the streamed-image configuration
+        forwarded to each (the transpose image spills too)."""
+        kw = dict(store=store, impl=impl, symmetric=False,
+                  stream_image=stream_image,
+                  image_chunk_bytes=image_chunk_bytes,
+                  image_readahead=image_readahead)
+        a_op = GraphOperator(tm_a, name=None if name is None else f"{name}/A",
+                             **kw)
+        at_op = GraphOperator(tm_at,
+                              name=None if name is None else f"{name}/At",
+                              **kw)
+        return cls(a_op, at_op)
+
+    @property
+    def stream_image(self) -> bool:
+        return self.a.stream_image or self.at.stream_image
+
+    def delete_image(self) -> None:
+        """Drop both operators' spilled images (streamed mode only)."""
+        self.a.delete_image()
+        self.at.delete_image()
 
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.at.matmat(self.a.matmat(x))

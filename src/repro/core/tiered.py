@@ -20,7 +20,9 @@ with safs the backend's own `stats` additionally count physical disk bytes
 Policies implemented from §3.4.4:
   * most-recent-block caching — the newest subspace block stays in the
     device tier (it is about to be re-read by reorthogonalization), and the
-    most recently *demoted* block's pages stay pinned in the page cache;
+    most recently *appended-then-demoted* subspace block's pages stay pinned
+    in the page cache (`host_pin`, driven by MultiVector.append_block — an
+    explicit lifecycle, so unrelated LRU demotions cannot steal the pin);
   * data identifiers — a transposed view shares its parent's identifier so
     cached bytes are recognized (we key the cache by `data_id`, not by
     object);
@@ -37,6 +39,12 @@ import numpy as np
 
 DEVICE = "device"
 HOST = "host"  # the "SSD" tier
+
+
+class ReadOnlyError(RuntimeError):
+    """Write attempted against a read-only store entry (streamed matrix
+    image chunks: per-chunk dirty tracking is not implemented, so a write
+    would silently diverge from the on-disk image)."""
 
 
 @dataclasses.dataclass
@@ -60,6 +68,7 @@ class _Entry:
     has_host: bool                 # backend holds a copy of data_id
     nbytes: int
     dirty: bool                    # device copy newer than host copy
+    readonly: bool = False         # writes raise (streamed matrix image)
 
 
 class TieredStore:
@@ -107,15 +116,22 @@ class TieredStore:
 
     # -- core API --------------------------------------------------------------
     def put(self, name: str, value: jnp.ndarray, *, tier: str = DEVICE,
-            data_id: str | None = None) -> None:
+            data_id: str | None = None, readonly: bool = False) -> None:
+        prev = self._entries.get(name)
+        if prev is not None and prev.readonly:
+            raise ReadOnlyError(
+                f"store entry {name!r} is read-only (streamed matrix image "
+                f"chunk; per-chunk dirty tracking is not implemented — "
+                f"rebuild the operator instead of writing through it)")
         nbytes = int(np.prod(value.shape)) * value.dtype.itemsize
         if tier == DEVICE:
             self._evict_for(nbytes)
             self._entries[name] = _Entry(data_id or name, DEVICE,
                                          jnp.asarray(value), False, nbytes,
-                                         True)
+                                         True, readonly)
         else:
-            e = _Entry(data_id or name, HOST, None, True, nbytes, False)
+            e = _Entry(data_id or name, HOST, None, True, nbytes, False,
+                       readonly)
             self.backend.store(e.data_id, np.asarray(value))
             self.stats.host_bytes_written += nbytes
             self.stats.host_writes += 1
@@ -154,13 +170,23 @@ class TieredStore:
             e.has_host = True
             self.stats.host_bytes_written += e.nbytes
             self.stats.host_writes += 1
-            # most-recent-block page-cache pin (§3.4.4): the block just
-            # demoted is the one reorthogonalization re-reads next
-            if self._recent_host_id is not None:
-                self.backend.unpin(self._recent_host_id)
-            self.backend.pin(e.data_id)
-            self._recent_host_id = e.data_id
         e.device_val, e.tier, e.dirty = None, HOST, False
+
+    def host_pin(self, name: str) -> None:
+        """Pin `name`'s pages in the backend page cache until the next
+        host_pin supersedes it — the §3.4.4 "cache the most recent dense
+        matrix" policy. The pin is owned by the subspace append lifecycle
+        (MultiVector.append_block pins the block it just demoted): plain
+        LRU demotions must NOT move it, or restart-compression's output
+        spills steal the pin from the block reorthogonalization is about
+        to re-read (the page cache then never hits on the solver path)."""
+        e = self._entries[name]
+        if self._recent_host_id == e.data_id:
+            return
+        if self._recent_host_id is not None:
+            self.backend.unpin(self._recent_host_id)
+        self.backend.pin(e.data_id)
+        self._recent_host_id = e.data_id
 
     def pin(self, name: str) -> None:
         """Pin in device tier — the most-recent-block cache of §3.4.4."""

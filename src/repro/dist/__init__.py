@@ -1,14 +1,17 @@
 """Distributed sharded-SpMM eigensolver layer (paper §3: SEM-SpMM).
 
-layout   — vertex -> (pod, data, model) mesh placement, padding, panels
-dspmm    — packed edge panels, sharded SpMM, fused eigen expansion step
-compress — int8-scaled cross-pod reductions
+layout        — vertex -> (pod, data, model) mesh placement, padding, panels
+dspmm         — packed edge panels, sharded SpMM, fused eigen expansion step
+dist_operator — DistOperator: the core restart loop's fused-expand adapter
+compress      — int8-scaled cross-pod reductions
 """
 from repro.dist.layout import padded_n, vertex_permutation
 from repro.dist.dspmm import (CHUNK, build_dspmm, build_eigen_step,
                               build_eigen_step_compressed, edge_spec,
                               pack_compressed_panels, pack_edge_panels,
                               vector_spec)
+from repro.dist.dist_operator import (DistOperator, default_mesh, e2e_mesh,
+                                      pod_compressed_deviation)
 from repro.dist.compress import compressed_psum_pod
 
 __all__ = [
@@ -16,5 +19,6 @@ __all__ = [
     "CHUNK", "build_dspmm", "build_eigen_step",
     "build_eigen_step_compressed", "edge_spec", "pack_compressed_panels",
     "pack_edge_panels", "vector_spec",
+    "DistOperator", "default_mesh", "e2e_mesh", "pod_compressed_deviation",
     "compressed_psum_pod",
 ]

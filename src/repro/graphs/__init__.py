@@ -1,11 +1,13 @@
 """Graph substrate: synthetic generators, tile packing, partitioning, operators."""
-from repro.graphs.synth import rmat_graph, knn_band_graph, clustered_web_graph, erdos_renyi
+from repro.graphs.synth import (rmat_graph, rmat_spectral, knn_band_graph,
+                                clustered_web_graph, erdos_renyi)
 from repro.graphs.tiles import TiledMatrix, pack_tiles, scsr_encode_tile, scsr_decode_tile
 from repro.graphs.partition import balance_tile_rows
 from repro.graphs.laplacian import normalized_adjacency, laplacian, degrees
 
 __all__ = [
-    "rmat_graph", "knn_band_graph", "clustered_web_graph", "erdos_renyi",
+    "rmat_graph", "rmat_spectral", "knn_band_graph", "clustered_web_graph",
+    "erdos_renyi",
     "TiledMatrix", "pack_tiles", "scsr_encode_tile", "scsr_decode_tile",
     "balance_tile_rows", "normalized_adjacency", "laplacian", "degrees",
 ]

@@ -114,6 +114,17 @@ def erdos_renyi(n: int, nnz: int, *, seed: int = 0, symmetric: bool = True):
     return _dedup(rows, cols, n)
 
 
+def rmat_spectral(n: int, nnz: int, *, seed: int = 0):
+    """Symmetric normalized-adjacency R-MAT graph — the standard input of
+    the end-to-end eigensolver drivers (examples/dist_eigen_e2e.py,
+    benchmarks/bench_dist_e2e.py, the dist-vs-core parity tests). One
+    shared constructor so every driver factorizes the *same* operator for
+    a given (n, nnz, seed) and spectra are directly comparable."""
+    from repro.graphs.laplacian import normalized_adjacency
+    r, c, v = rmat_graph(n, nnz, seed=seed, symmetric=True)
+    return normalized_adjacency(n, r, c, v)
+
+
 def to_dense(n: int, rows, cols, vals) -> np.ndarray:
     d = np.zeros((n, n), dtype=np.float32)
     d[rows, cols] = vals

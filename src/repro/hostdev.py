@@ -1,0 +1,25 @@
+"""Pre-jax bootstrap shared by the end-to-end drivers.
+
+This module must stay free of jax (and jax-importing repro modules): its
+one job is to set XLA_FLAGS before the jax backends initialize, and the
+drivers (examples/dist_eigen_e2e.py, benchmarks/bench_dist_e2e.py) import
+it before anything else touches jax.
+"""
+from __future__ import annotations
+
+import os
+
+
+def force_host_devices(n: int = 8) -> None:
+    """Force a multi-device host platform before jax initializes.
+
+    Honors an explicit XLA_FLAGS already carrying a device-count pin, and
+    falls back to the scripts/run_tier1.sh subprocess pin
+    (DIST_SUBPROCESS_XLA_FLAGS) so the tier-1 smoke runs and the manual
+    drivers agree on the mesh.
+    """
+    flags = os.environ.get("XLA_FLAGS",
+                           os.environ.get("DIST_SUBPROCESS_XLA_FLAGS", ""))
+    if "xla_force_host_platform_device_count" not in flags:
+        flags = f"{flags} --xla_force_host_platform_device_count={n}".strip()
+    os.environ["XLA_FLAGS"] = flags

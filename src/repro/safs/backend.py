@@ -105,11 +105,14 @@ class SafsBackend:
                  cache_bytes: int = 64 << 20, use_mmap: bool = False,
                  enable_prefetch: bool = True, io_workers: int = 2,
                  readahead_depth: int = 8, write_behind: bool = True,
-                 wb_max_pages: int = 4096):
+                 wb_max_pages: int = 4096, pin_pages: bool = True):
         self.root = root
         self.page_size = int(page_size)
         self.use_mmap = use_mmap
         self.enable_prefetch = enable_prefetch
+        # pin_pages=False degrades the cache to plain LRU (no §3.4.4
+        # most-recent-matrix pin) — the measured baseline in bench_safs
+        self.pin_pages = bool(pin_pages)
         os.makedirs(root, exist_ok=True)
         self._files: Dict[str, PageFile] = {}
         self._lock = threading.RLock()
@@ -194,6 +197,15 @@ class SafsBackend:
             pf = self._files.get(data_id)
         if pf is None:
             return 0
+        # generation captured BEFORE the staleness probes: a submit that
+        # precedes the capture is necessarily still queued when the probe
+        # below runs (retire follows our disk read in any stale
+        # interleaving), so the probe catches it; one that follows the
+        # capture fails the post-insert compare. Capturing after the
+        # probes would leave a window where a submit lands in between and
+        # both checks pass on stale bytes.
+        gen0 = (self.writebehind.generation(data_id)
+                if self.writebehind is not None else 0)
         wb = (self.writebehind
               if self.writebehind is not None and not self.writebehind.empty()
               else None)
@@ -209,10 +221,22 @@ class SafsBackend:
         n = 0
         for i, data in pf.read_pages_batch(missing).items():
             n += len(data)
-            if (self.writebehind is not None
-                    and self.writebehind.lookup(data_id, i) is not None):
+            if self.writebehind is None:
+                self.cache.put(data_id, i, data, dirty=False)
+                continue
+            if self.writebehind.lookup(data_id, i) is not None:
                 continue   # dirtied + evicted while we read: ours is stale
-            self.cache.put(data_id, i, data, dirty=False)
+            # insert only if no evict for this file landed inside our
+            # read window: the queue entry may have already RETIRED
+            # (lookup misses it while the disk already holds newer
+            # bytes), so only an unchanged submit generation proves the
+            # fill fresh. The check-and-insert is atomic — a stale line
+            # must never be published, even transiently. A refused fill
+            # costs nothing here: prefetch returns no bytes, and the
+            # consumer's load re-reads.
+            self.cache.put_clean_if(
+                data_id, i, data,
+                lambda: self.writebehind.generation(data_id) == gen0)
         self.cache.fill_bytes_read(n)
         return n
 
@@ -244,6 +268,10 @@ class SafsBackend:
             pass    # fall through: the batched miss path below re-reads
         with self._lock:
             pf = self._files[data_id]
+        # generation captured BEFORE the _stage_page probes — see _fill
+        # for why capture-after-probe leaves a stale-fill window
+        gen0 = (self.writebehind.generation(data_id)
+                if self.writebehind is not None else 0)
         pages: Dict[int, bytes] = {}
         missing = []
         for i in pf.page_indices():
@@ -256,13 +284,41 @@ class SafsBackend:
             filled = pf.read_pages_batch(missing)
             self.cache.fill_bytes_read(sum(len(d) for d in filled.values()))
             for i, data in filled.items():
-                if self.writebehind is not None:
+                if self.writebehind is None:
+                    self.cache.put(data_id, i, data, dirty=False)
+                    pages[i] = data
+                    continue
+                wb = self.writebehind.lookup(data_id, i)
+                if wb is not None:       # evicted into the queue mid-read
+                    pages[i] = wb
+                    continue
+                if self.cache.put_clean_if(
+                        data_id, i, data,
+                        lambda: self.writebehind.generation(data_id)
+                        == gen0):
+                    pages[i] = data
+                    continue
+                # insert refused: an evict for this file raced our read
+                # window (see _fill — the queue entry may have already
+                # retired, so lookup alone cannot prove freshness).
+                # Retry optimistically: serve the queue's bytes if the
+                # entry is still pending, else re-read the page under
+                # its own generation capture — a retire made the disk
+                # fresh, and a *further* racing evict re-fails the
+                # capture and loops. The fresh bytes are left uncached
+                # (caching would need yet another guard round; an
+                # uncached page merely costs a re-read).
+                while True:
+                    gen1 = self.writebehind.generation(data_id)
                     wb = self.writebehind.lookup(data_id, i)
-                    if wb is not None:   # evicted into the queue mid-read
+                    if wb is not None:
                         pages[i] = wb
-                        continue
-                self.cache.put(data_id, i, data, dirty=False)
-                pages[i] = data
+                        break
+                    data = pf.read_pages_batch([i])[i]
+                    self.cache.fill_bytes_read(len(data))
+                    if self.writebehind.generation(data_id) == gen1:
+                        pages[i] = data
+                        break
         return pf.assemble(pages)
 
     def delete(self, data_id: str) -> None:
@@ -281,7 +337,8 @@ class SafsBackend:
             return data_id in self._files
 
     def pin(self, data_id: str) -> None:
-        self.cache.pin(data_id)
+        if self.pin_pages:
+            self.cache.pin(data_id)
 
     def unpin(self, data_id: str) -> None:
         self.cache.unpin(data_id)
@@ -326,8 +383,8 @@ class SafsBackend:
 
 def make_backend(spec, **opts) -> StorageBackend:
     """Factory: 'ram', 'safs' (opts: root, page_size, cache_bytes,
-    use_mmap, io_workers, readahead_depth, write_behind, wb_max_pages),
-    or pass through an already-constructed backend."""
+    use_mmap, io_workers, readahead_depth, write_behind, wb_max_pages,
+    pin_pages), or pass through an already-constructed backend."""
     if not isinstance(spec, str):
         return spec
     if spec == "ram":

@@ -121,6 +121,28 @@ class PageCache:
         with self._lock:
             return (data_id, page) in self._lines
 
+    def put_clean_if(self, data_id: str, page: int, data: bytes,
+                     fresh) -> bool:
+        """Insert a clean fill only if `fresh()` — evaluated under the
+        cache lock — confirms no eviction raced the disk read that
+        produced it (the backend passes a write-behind generation
+        compare). Returns False, inserting nothing, on a failed check.
+
+        The atomicity matters: an insert-then-verify would publish the
+        possibly-stale line for the verify's duration, and a concurrent
+        reader could be served it while the write-behind queue no longer
+        shadows the page (its batch already retired). Evictions bump the
+        generation while still holding this lock, so check-then-insert
+        under the same lock leaves no window: a racing evict is either
+        fully ordered before (check fails) or after (its dirty line was
+        present during our insert, and the no-clean-clobber rule in
+        `put` already kept our bytes out)."""
+        with self._lock:          # RLock: the nested put re-enters
+            if not fresh():
+                return False
+            self.put(data_id, page, data, dirty=False)
+            return True
+
     def put(self, data_id: str, page: int, data: bytes, *,
             dirty: bool) -> None:
         """Insert/overwrite a line. dirty=False for fill-on-read/prefetch,
@@ -236,6 +258,8 @@ class WriteBehind:
         self._cv = threading.Condition(self._lock)
         self._pending: "OrderedDict[str, Dict[int, bytes]]" = OrderedDict()
         self._inflight: Optional[Tuple[str, Dict[int, bytes]]] = None
+        self._gen: Dict[str, int] = {}   # per-file submit counter (stale-
+        #                                  fill guard: see generation())
         self._n_pending = 0            # pages queued (excl. in flight)
         self._error: Optional[BaseException] = None
         self._error_id: Optional[str] = None   # file the error belongs to
@@ -325,6 +349,7 @@ class WriteBehind:
                 if p not in batch:
                     self._n_pending += 1
                 batch[p] = data
+            self._gen[data_id] = self._gen.get(data_id, 0) + 1
             self.max_depth_pages = max(self.max_depth_pages,
                                        self.pending_pages_locked())
             self._cv.notify_all()
@@ -349,6 +374,21 @@ class WriteBehind:
         and a just-retired batch is on disk, so reading disk is fresh."""
         return self._n_pending == 0 and self._inflight is None
 
+    def generation(self, data_id: str) -> int:
+        """Monotonic count of submits for a file — the stale-fill guard.
+
+        A disk reader that captures the generation *before* reading and
+        observes it unchanged *after* inserting its fill into the cache
+        knows no eviction raced the read: `lookup` alone cannot prove
+        that, because a batch that was submitted AND retired inside the
+        window has already left the queue (the disk then holds newer
+        bytes than the fill). `discard` drops the counter; the reset
+        reads as a generation change, which errs toward dropping a
+        (possibly fine) fill — the safe direction.
+        """
+        with self._lock:
+            return self._gen.get(data_id, 0)
+
     def lookup(self, data_id: str, page: int) -> Optional[bytes]:
         """Newest not-yet-retired bytes for a page, or None. Pending beats
         in-flight (a resubmission after the batch was popped is newer)."""
@@ -366,6 +406,7 @@ class WriteBehind:
         captured for this file dies with it — it must not pause the
         worker or fail a later unrelated drain."""
         with self._cv:
+            self._gen.pop(data_id, None)
             while True:     # an in-flight batch that fails re-queues itself
                 batch = self._pending.pop(data_id, None)
                 if batch:

@@ -59,6 +59,88 @@ def test_distributed_spmm_and_eigenstep(run_forced_mesh):
     assert "DIST_OK" in out
 
 
+def test_dist_operator_single_device_parity():
+    """The fused-expand hook end-to-end on the main process's 1-device
+    (1,1,1) mesh: eigsh drives build_eigen_step through DistOperator and
+    must reproduce the local GraphOperator spectrum to rtol 1e-5."""
+    import numpy as np
+    from repro.core import GraphOperator, eigsh
+    from repro.dist import DistOperator
+    from repro.graphs import pack_tiles, rmat_spectral
+    n = 500
+    r, c, v = rmat_spectral(n, 5000, seed=7)
+    tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    local = eigsh(GraphOperator(tm, impl="ref"), 4, block_size=2,
+                  tol=1e-7, max_restarts=100, impl="ref")
+    dop = DistOperator(n, r, c, v)
+    dist = eigsh(dop, 4, block_size=2, tol=1e-7, max_restarts=100,
+                 impl="ref")
+    assert dop.n_fused_steps > 0           # really took the fused path
+    np.testing.assert_allclose(np.sort(dist.eigenvalues),
+                               np.sort(local.eigenvalues), rtol=1e-5)
+    # vertex maps: nat<->pad round-trip, and the returned eigenvectors
+    # (position space) must satisfy the NATURAL-space eigen equation
+    # once mapped back through pad_to_nat
+    x = np.random.default_rng(0).standard_normal((n, 3)).astype(np.float32)
+    np.testing.assert_array_equal(dop.pad_to_nat(dop.nat_to_pad(x)), x)
+    from repro.graphs.synth import to_dense
+    a = to_dense(n, r, c, v)
+    vec = dop.pad_to_nat(dist.eigenvectors)
+    res = np.linalg.norm(a @ vec - vec * dist.eigenvalues[None, :], axis=0)
+    assert res.max() < 1e-3, res
+
+
+def test_dist_eigsh_parity_and_pod_compressed(run_forced_mesh):
+    """End-to-end dist-vs-core spectrum parity on an RMAT graph over the
+    pinned 8-device (2,2,2) mesh, plus the pod_compressed tolerance check
+    over >= 2 full restart cycles (ROADMAP: measure error accumulation)."""
+    out = run_forced_mesh("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, numpy as np
+        from repro.core import GraphOperator, eigsh
+        from repro.dist import DistOperator
+        from repro.graphs import pack_tiles, rmat_spectral
+
+        n, nev, bs = 600, 4, 2
+        r, c, v = rmat_spectral(n, 6000, seed=1)
+        tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64),
+                        min_block_nnz=4)
+        local = eigsh(GraphOperator(tm, impl="ref"), nev, block_size=bs,
+                      tol=1e-7, max_restarts=100, impl="ref")
+        w_local = np.sort(local.eigenvalues)
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        dop = DistOperator(n, r, c, v, mesh=mesh)
+        dist = eigsh(dop, nev, block_size=bs, tol=1e-7, max_restarts=100,
+                     impl="ref")
+        assert dist.converged and dop.n_fused_steps > 0
+        np.testing.assert_allclose(np.sort(dist.eigenvalues), w_local,
+                                   rtol=1e-5)
+
+        # pod_compressed: int8 cross-pod reductions; the shared |lambda|
+        # deviation methodology (dist.pod_compressed_deviation) must
+        # settle, not grow, over >= 2 full restart cycles
+        from repro.dist import pod_compressed_deviation
+        devs = pod_compressed_deviation(n, r, c, v, w_local, mesh=mesh,
+                                        nev=nev, block_size=bs,
+                                        max_restarts=3)
+        assert len(devs) >= 2, devs
+        assert devs[-1] < 2e-2, devs
+        assert devs[-1] <= 2.0 * min(devs[1:]) + 1e-12, devs
+
+        # compressed 6-byte/edge stream (bf16 subspace stack): tracks the
+        # spectrum to input-rounding tolerance
+        dop_z = DistOperator(n, r, c, v, mesh=mesh, compressed=True)
+        comp = eigsh(dop_z, nev, block_size=bs, tol=1e-4, max_restarts=20,
+                     impl="ref")
+        dev_z = np.abs(np.sort(np.abs(comp.eigenvalues))
+                       - np.sort(np.abs(w_local))).max()
+        assert dev_z < 5e-3, dev_z
+        print("DIST_E2E_OK", devs, dev_z)
+    """)
+    assert "DIST_E2E_OK" in out
+
+
 def test_compressed_pod_psum(run_forced_mesh):
     out = run_forced_mesh("""
         import warnings; warnings.filterwarnings('ignore')

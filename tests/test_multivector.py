@@ -105,3 +105,16 @@ def test_write_avoidance_on_clean_demote():
     store.promote("x")
     store.demote("x")     # not dirty — must not write again
     assert store.stats.host_bytes_written == w1
+
+
+def test_readonly_entry_rejects_overwrite():
+    from repro.core import ReadOnlyError
+    store = TieredStore()
+    store.put("img/c0", jnp.ones((32, 4)), tier=HOST, readonly=True)
+    with pytest.raises(ReadOnlyError, match="read-only"):
+        store.put("img/c0", jnp.zeros((32, 4)))
+    # unchanged — the guard fired before any bytes moved
+    np.testing.assert_array_equal(np.asarray(store.get("img/c0")),
+                                  np.ones((32, 4), np.float32))
+    store.delete("img/c0")              # delete stays allowed (delete_image)
+    store.put("img/c0", jnp.zeros((32, 4)))   # fresh entry is writable again

@@ -246,6 +246,47 @@ def test_safs_streams_from_disk_under_tiny_cache(disk_tmp):
     store.close()
 
 
+def test_recent_block_pin_survives_flood_and_hits_on_reread(disk_tmp):
+    """§3.4.4 regression: the most recently appended-then-demoted subspace
+    block's pages must stay pinned through a sequential scan larger than
+    the cache (LRU's pathological flood) and hit on the reorth re-read.
+    Pre-fix, every demotion re-pinned — unrelated LRU spills stole the pin
+    and the solver-path hit rate collapsed to ~0.02 (BENCH_safs.json)."""
+    rng = np.random.default_rng(7)
+    n, b, nblocks = 2048, 4, 8
+    store = TieredStore(
+        device_budget_bytes=2 * n * 4 * b, backend="safs",
+        backend_opts={"root": os.path.join(disk_tmp, "pin"),
+                      "cache_bytes": 3 * n * 4 * b, "page_size": 4096,
+                      "enable_prefetch": False})
+    mv = MultiVector(store, n, group_size=2, impl="ref")
+    for _ in range(nblocks):
+        mv.append_block(jnp.asarray(rng.standard_normal((n, b)), np.float32))
+    cache = store.backend.cache
+    recent = mv.block_names()[-2]          # newest on-"SSD" block
+    assert cache.pinned() == {recent}
+    # flood: a full sequential scan (8 blocks through a 3-block cache)
+    small = jnp.asarray(rng.standard_normal((nblocks * b, 2)), jnp.float32)
+    mv.mv_times_mat(small)
+    d = store.backend.stats
+    hits0, misses0 = d.cache_hits, d.cache_misses
+    # the pinned block's pages must all still be resident: pure hits
+    np.asarray(store.get(recent))
+    pf = store.backend.pagefile(recent)
+    assert d.cache_hits == hits0 + pf.n_pages
+    assert d.cache_misses == misses0
+    # unrelated demotion churn must NOT steal the pin (the pre-fix bug):
+    # spill a pile of non-subspace entries through the device budget
+    for k in range(6):
+        store.put(f"scratch/{k}", jnp.asarray(
+            rng.standard_normal((n, b)), np.float32))
+    assert cache.pinned() == {recent}
+    # ...until the next append supersedes it
+    mv.append_block(jnp.asarray(rng.standard_normal((n, b)), np.float32))
+    assert cache.pinned() == {mv.block_names()[-2]}
+    store.close()
+
+
 def test_tier_semantics_identical_across_backends(disk_tmp):
     """Pin/demote/write-avoidance logic is backend-independent."""
     store = TieredStore(backend="safs",
@@ -406,6 +447,116 @@ def test_backend_read_your_evictions_via_write_behind(disk_tmp):
     store.close()
 
 
+def test_stale_clean_fill_cannot_outlive_write_behind_entry(disk_tmp):
+    """Race reconciliation: a clean fill that reads old disk bytes while a
+    concurrent eviction pushes newer bytes into the write-behind queue
+    must not publish a stale clean line — while the batch is queued the
+    queue shadows it, but once it retires the line would be served
+    forever. The interleaving (evict wins the lock just before the
+    reader's guarded insert) is forced by intercepting put_clean_if."""
+    backend = SafsBackend(os.path.join(disk_tmp, "race"),
+                          write_behind=True)
+    old = np.arange(1024, dtype=np.float32)          # exactly one page
+    new = np.full(1024, 7.0, dtype=np.float32)
+    backend.store("x", old)
+    backend.flush()                                   # disk holds `old`
+    backend.cache.invalidate("x")                     # force a disk fill
+    new_payload = backend.pagefile("x").split(new)[0]
+
+    real_pci = backend.cache.put_clean_if
+    fired = []
+
+    def racing_pci(data_id, page, data, fresh):
+        if data_id == "x" and page == 0 and not fired:
+            fired.append(True)   # the eviction wins the lock first
+            backend.writebehind.submit("x", {0: new_payload})
+        return real_pci(data_id, page, data, fresh)
+
+    backend.cache.put_clean_if = racing_pci
+    np.testing.assert_array_equal(backend.load("x"), new)   # not stale
+    backend.cache.put_clean_if = real_pci
+    backend.writebehind.drain()       # batch retires: queue stops shadowing
+    np.testing.assert_array_equal(backend.load("x"), new)
+    backend.close()
+
+
+def test_stale_clean_fill_guard_covers_retired_batch(disk_tmp):
+    """The harder interleaving: the racing batch both lands AND retires
+    inside the reader's read+insert window — a queue lookup alone comes
+    back empty (the entry is gone) while the disk already holds the newer
+    bytes, so only the submit-generation check can flag the stale fill."""
+    backend = SafsBackend(os.path.join(disk_tmp, "race2"),
+                          write_behind=True)
+    old = np.arange(1024, dtype=np.float32)          # exactly one page
+    new = np.full(1024, 9.0, dtype=np.float32)
+    backend.store("x", old)
+    backend.flush()
+    backend.cache.invalidate("x")
+    new_payload = backend.pagefile("x").split(new)[0]
+
+    real_pci = backend.cache.put_clean_if
+    fired = []
+
+    def racing_pci(data_id, page, data, fresh):
+        if data_id == "x" and page == 0 and not fired:
+            fired.append(True)
+            backend.writebehind.submit("x", {0: new_payload})
+            backend.writebehind.drain()   # batch fully retires to disk
+        return real_pci(data_id, page, data, fresh)
+
+    backend.cache.put_clean_if = racing_pci
+    np.testing.assert_array_equal(backend.load("x"), new)   # re-read disk
+    backend.cache.put_clean_if = real_pci
+    assert not backend.cache.peek("x", 0)   # stale fill was never inserted
+    np.testing.assert_array_equal(backend.load("x"), new)
+    backend.close()
+
+
+def test_stale_fill_guard_generation_captured_before_probe(disk_tmp):
+    """Ordering of the guard itself: the generation must be captured
+    BEFORE the staleness probes. If an evict lands between a page's probe
+    and a capture taken afterwards, and its batch retires while the disk
+    read is in flight, both the queue lookup (entry gone) and a late-
+    captured generation compare (bump already included) would pass on
+    stale bytes. Forced here: the evict fires during another page's
+    probe, the retire during the disk read."""
+    backend = SafsBackend(os.path.join(disk_tmp, "race3"),
+                          write_behind=True)
+    old = np.arange(2048, dtype=np.float32)          # exactly two pages
+    new_page0 = np.full(1024, 3.0, dtype=np.float32)
+    backend.store("x", old)
+    backend.flush()
+    backend.cache.invalidate("x")
+    pf = backend.pagefile("x")
+    want = old.copy()
+    want[:1024] = new_page0
+    new_payload = pf.split(want)[0]
+
+    real_get = backend.cache.get
+    fired = []
+
+    def probing_get(data_id, page, **kw):
+        if data_id == "x" and page == 1 and not fired:
+            fired.append(True)   # evict lands between probe(0) and capture
+            backend.writebehind.submit("x", {0: new_payload})
+        return real_get(data_id, page, **kw)
+
+    real_read = pf.read_pages_batch
+
+    def draining_read(idxs):
+        out = real_read(idxs)        # reads the pre-retire (stale) bytes
+        backend.writebehind.drain()  # batch retires mid-read
+        return out
+
+    backend.cache.get = probing_get
+    pf.read_pages_batch = draining_read
+    np.testing.assert_array_equal(backend.load("x"), want)
+    backend.cache.get = real_get
+    pf.read_pages_batch = real_read
+    np.testing.assert_array_equal(backend.load("x"), want)
+    backend.close()
+
+
 # --------------------------------------------------- SSD-streamed SpMM image
 def test_graph_operator_streams_image_from_safs(disk_tmp, small_graph):
     """stream_image=True spills the edge tiles into the page store and
@@ -435,6 +586,65 @@ def test_graph_operator_streams_image_from_safs(disk_tmp, small_graph):
                                rtol=0, atol=0)
     assert store.stats.host_bytes_read > r0   # re-streamed per matmat
     op_stream.delete_image()
+    assert not [d for d in store.backend.data_ids() if "tiles" in d]
+    store.close()
+
+
+def test_streamed_image_chunks_are_readonly(disk_tmp, small_graph):
+    """The streamed image has no per-chunk dirty tracking: writing through
+    a chunk name must raise, not silently diverge from the on-disk image."""
+    from repro.graphs import pack_tiles
+    from repro.core import GraphOperator, ReadOnlyError
+    n, r, c, v, a = small_graph
+    tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    store = TieredStore(backend="safs", backend_opts={
+        "root": os.path.join(disk_tmp, "ro")})
+    op = GraphOperator(tm, store=store, impl="ref", stream_image=True,
+                       image_chunk_bytes=1 << 16)
+    chunk = next(nm for nm in store.names() if "/tiles/" in nm)
+    with pytest.raises(ReadOnlyError, match="read-only"):
+        store.put(chunk, jnp.zeros((8, 8)))
+    if op._has_coo:
+        with pytest.raises(ReadOnlyError, match="read-only"):
+            store.put(f"{op._name}/coo_vals", jnp.zeros(4))
+    x = jnp.asarray(np.random.default_rng(4)
+                    .standard_normal((tm.shape[0], 2)), jnp.float32)
+    y0 = np.asarray(op.matmat(x))        # image unharmed by the attempts
+    np.testing.assert_allclose(
+        y0, np.asarray(GraphOperator(tm, impl="ref").matmat(x)),
+        rtol=1e-6, atol=1e-6)
+    op.delete_image()                    # delete path still allowed
+    store.close()
+
+
+def test_normal_operator_streams_both_images(disk_tmp):
+    """NormalOperator.from_tiles forwards the streamed-image machinery to
+    BOTH constituent operators (an SVD solve otherwise keeps two full
+    images in RAM) and delete_image drops both spills."""
+    from repro.graphs import pack_tiles, clustered_web_graph
+    from repro.core import NormalOperator, svds
+    n = 600
+    r, c, v = clustered_web_graph(n, 4000, seed=2)
+    tm_a = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    tm_at = pack_tiles(n, n, c, r, v, block_shape=(64, 64), min_block_nnz=4)
+    store = TieredStore(backend="safs", backend_opts={
+        "root": os.path.join(disk_tmp, "svd")})
+    gram = NormalOperator.from_tiles(tm_a, tm_at, store=store, impl="ref",
+                                     stream_image=True,
+                                     image_chunk_bytes=1 << 16, name="pg")
+    assert gram.stream_image
+    store.flush()
+    spilled = [d for d in store.backend.data_ids() if "tiles" in d]
+    assert any(d.startswith("pg/A/") for d in spilled)
+    assert any(d.startswith("pg/At/") for d in spilled)   # transpose too
+    res = svds(gram.a, gram.at, 3, block_size=2, tol=1e-6,
+               max_restarts=120, store=store, impl="ref")
+    import scipy.sparse as sp
+    import scipy.sparse.linalg as spla
+    a = sp.coo_matrix((v, (r, c)), shape=(n, n)).tocsr()
+    s_sc = np.sort(spla.svds(a, k=3, return_singular_vectors=False))
+    np.testing.assert_allclose(np.sort(res.s), s_sc, rtol=1e-3, atol=1e-3)
+    gram.delete_image()
     assert not [d for d in store.backend.data_ids() if "tiles" in d]
     store.close()
 
