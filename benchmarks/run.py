@@ -11,11 +11,12 @@ import sys
 
 def main() -> None:
     from benchmarks import bench_spmm, bench_tasops, bench_eigen, \
-        bench_roofline, bench_safs, bench_dist_e2e
+        bench_roofline, bench_safs, bench_dist_e2e, bench_subspace_io
     rows: list = []
     mods = {"spmm": bench_spmm, "tasops": bench_tasops,
             "eigen": bench_eigen, "roofline": bench_roofline,
-            "safs": bench_safs, "dist_e2e": bench_dist_e2e}
+            "safs": bench_safs, "dist_e2e": bench_dist_e2e,
+            "subspace_io": bench_subspace_io}
     selected = sys.argv[1:] or list(mods)
     for name in selected:
         mods[name].run(rows)

@@ -92,6 +92,9 @@ def main():
     print(f"logical tier I/O:  read {s.host_bytes_read/1e6:8.1f} MB, "
           f"wrote {s.host_bytes_written/1e6:6.1f} MB "
           f"(write/read = {ratio:.4f}; paper Table 3: 0.028)")
+    print(f"streamed subspace passes: {s.passes} "
+          f"({s.bytes_per_pass()/1e6:.2f} MB/pass — fused CGS2 reads the "
+          f"subspace 2x per expansion, restart compression 1x, §3.4.3)")
     print(f"physical disk I/O: read {d.host_bytes_read/1e6:8.1f} MB, "
           f"wrote {d.host_bytes_written/1e6:6.1f} MB "
           f"(page-cache hits {d.cache_hits}, misses {d.cache_misses})")

@@ -39,6 +39,15 @@ echo "disk subset TMPDIR footprint: $(du -sh "$DISK_TMP" | cut -f1)"
 echo "== bench_safs smoke (results/BENCH_safs.json) =="
 TMPDIR="$DISK_TMP" python benchmarks/bench_safs.py --smoke
 
+# Smoke-sized subspace-pass-fusion I/O bench (PR 5): byte-exact
+# reads-per-expansion and reads-per-restart, fused vs unfused, archived in
+# results/BENCH_subspace_io.json. The bench self-validates (validate():
+# non-zero exit on missing fields, a fused/unfused expansion read ratio
+# above 0.6, a restart compression that re-reads the subspace, or
+# fused-vs-unfused spectrum parity worse than rtol 1e-5).
+echo "== bench_subspace_io smoke (results/BENCH_subspace_io.json) =="
+TMPDIR="$DISK_TMP" python benchmarks/bench_subspace_io.py --smoke
+
 # Smoke-sized end-to-end sharded eigensolve (PR 4): core restart loop
 # driving the fused dist step on a forced 8-device mesh. The bench
 # self-validates (non-zero exit when parity fails); the explicit check

@@ -2,6 +2,7 @@
 from repro.core.tiered import (TieredStore, IOStats, DEVICE, HOST,
                                ReadOnlyError)
 from repro.core.multivector import MultiVector
+from repro.core.stream import SubspacePass
 from repro.core.ortho import cholqr, svqb, bcgs2, ortho_error
 from repro.core.operator import (GraphOperator, NormalOperator, DenseOperator,
                                  HvpOperator, LinearOperator)
@@ -12,7 +13,7 @@ from repro.core.residuals import EigResult, true_residuals
 
 __all__ = [
     "TieredStore", "IOStats", "DEVICE", "HOST", "ReadOnlyError",
-    "MultiVector",
+    "MultiVector", "SubspacePass",
     "cholqr", "svqb", "bcgs2", "ortho_error",
     "GraphOperator", "NormalOperator", "DenseOperator", "HvpOperator",
     "LinearOperator", "eigsh", "lanczos_eigsh", "svds", "SvdResult",

@@ -32,14 +32,19 @@ from repro.kernels import ops as kops
 
 
 def _expand(op, v: MultiVector, q: jnp.ndarray, h: np.ndarray,
-            impl: kops.Impl) -> tuple[jnp.ndarray, np.ndarray, np.ndarray]:
+            impl: kops.Impl, *, fused_passes: bool = True
+            ) -> tuple[jnp.ndarray, np.ndarray, np.ndarray]:
     """One block expansion. Appends q to V; returns (q_next, new H, R_next).
 
-    Two paths produce the identical Krylov invariant A·q = V·h + q_next·r:
+    Every path produces the identical Krylov invariant A·q = V·h + q_next·r
+    with h = h1 + h2 (the bcgs2 convention — the second-pass correction
+    belongs in the H column, since W = V·(h1+h2) + Q·R is what actually
+    holds; the solver used to hand-inline CGS2 here and drop h2):
 
-      * local: semi-external SpMM then two grouped CGS passes over the
-        out-of-core subspace, then CholQR — four streamed re-reads of V;
-      * fused (operator advertises `supports_fused_expand`, e.g. the
+      * local: semi-external SpMM then `ortho.bcgs2` over the out-of-core
+        subspace — two streamed reads of V when fused_passes (each CGS
+        pass is one `SubspacePass` read, §3.4.3), four when not;
+      * operator-fused (advertises `supports_fused_expand`, e.g. the
         sharded `dist.DistOperator`): one combined SpMM+CGS2/CholQR2 step
         over the operator's device-resident subspace shards — V's blocks
         are *not* re-read from the store at all; the MultiVector is the
@@ -52,11 +57,7 @@ def _expand(op, v: MultiVector, q: jnp.ndarray, h: np.ndarray,
         q_next, h_col, r_next = op.fused_expand(v, q)
     else:
         w = op.matmat(q)                               # semi-external SpMM
-        h_col = v.mv_trans_mv(w)                       # VᵀAQ (m_new, b)
-        w = w - v.mv_times_mat(h_col)
-        h2 = v.mv_trans_mv(w)                          # CGS2 second pass
-        w = w - v.mv_times_mat(h2)
-        q_next, r_next = cholqr(w, impl=impl)
+        q_next, h_col, r_next = bcgs2(v, w, impl=impl, fused=fused_passes)
 
     m_old = h.shape[0]
     m_new = m_old + b
@@ -72,7 +73,7 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
           tol: float = 1e-6, max_restarts: int = 60, which: str = "LM",
           store: TieredStore | None = None, impl: kops.Impl = "auto",
           group_size: int = 8, seed: int = 0,
-          compute_eigenvectors: bool = True,
+          compute_eigenvectors: bool = True, fused_passes: bool = True,
           callback: Callable | None = None) -> EigResult:
     """Compute `nev` eigenpairs of a symmetric LinearOperator.
 
@@ -82,6 +83,12 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
     Pass `store=TieredStore(backend="safs", backend_opts={"root": dir})`
     to keep the subspace in SAFS page files on disk (§3.4.1) instead of
     the default in-RAM emulation — the solver code is backend-agnostic.
+
+    fused_passes=True (default) runs every whole-subspace operation
+    through the fused streamed-pass engine (§3.4.3): CGS2 reorthogonali-
+    zation in 2 subspace reads per expansion instead of 4, restart
+    compression in exactly 1 read regardless of k_keep. fused_passes=
+    False keeps the unfused reference path (parity tests, I/O benches).
     """
     b = block_size
     if num_blocks is None:
@@ -107,7 +114,8 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
 
     for restarts in range(max_restarts):
         while v.ncols + b <= m_max:
-            q, h, r_next = _expand(op, v, q, h, impl)
+            q, h, r_next = _expand(op, v, q, h, impl,
+                                   fused_passes=fused_passes)
             n_ops += 1
 
         # --- restart: Rayleigh-Ritz on H ---------------------------------
@@ -129,15 +137,17 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
             break
 
         # --- thick restart: compress V onto k best Ritz vectors ----------
+        # fused: all k_keep/b output blocks from ONE streamed read of V
         yk = jnp.asarray(y[:, :k_keep], jnp.float32)
-        v_new = v.compress(yk, [b] * (k_keep // b))
+        v_new = v.compress(yk, [b] * (k_keep // b), fused=fused_passes)
         v.delete()
         v = v_new
         h = np.diag(theta[:k_keep])
         # A V_new = V_new Θ + Q S  with S = r_next @ y_keep[last rows]
         # regenerated automatically on next expansion via VᵀAQ.
 
-    # --- materialize Ritz vectors (one more out-of-core GEMM) -------------
+    # --- materialize Ritz vectors: one more streamed pass (the same
+    # multi-accumulator engine as restart compression — one read of V) ----
     vec = None
     if compute_eigenvectors:
         theta_full, y_full = np.linalg.eigh(h)

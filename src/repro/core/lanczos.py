@@ -25,8 +25,8 @@ def lanczos_eigsh(op, nev: int, *, block_size: int = 4,
                   num_blocks: int | None = None, which: str = "LM",
                   store: TieredStore | None = None,
                   impl: kops.Impl = "auto", group_size: int = 8,
-                  seed: int = 0, compute_eigenvectors: bool = True
-                  ) -> EigResult:
+                  seed: int = 0, compute_eigenvectors: bool = True,
+                  fused_passes: bool = True) -> EigResult:
     b = block_size
     if num_blocks is None:
         num_blocks = 4 * (-(-nev // b)) + 2
@@ -41,7 +41,7 @@ def lanczos_eigsh(op, nev: int, *, block_size: int = 4,
     r_next = np.zeros((b, b), dtype=np.float64)
     n_ops = 0
     while v.ncols + b <= m_max:
-        q, h, r_next = _expand(op, v, q, h, impl)
+        q, h, r_next = _expand(op, v, q, h, impl, fused_passes=fused_passes)
         n_ops += 1
 
     theta, y = np.linalg.eigh(h)

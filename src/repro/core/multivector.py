@@ -3,23 +3,31 @@
 The Krylov subspace S ∈ R^{n×m} is stored as NB column blocks of width b
 (one "TAS matrix" per block, each a separate object in the TieredStore — the
 analogue of one SAFS file per matrix, §3.4.1). The eleven Anasazi MultiVector
-operations of Table 1 are implemented block-streamed:
+operations of Table 1 are implemented block-streamed.
 
-  * the *group decomposition* of Fig. 5 bounds fast-tier memory: operations
-    touching many blocks (MvTimesMatAddMv / MvTransMv) stream the blocks in
-    groups of `group_size`, materializing only partial results;
-  * MvScale is *lazy* — a scalar per block folded into the next consumer
-    (the paper's lazy evaluation, §3.4.4), costing zero I/O;
-  * the newest block is pinned in the device tier (most-recent-block cache);
+I/O discipline (§3.4.3 pass minimization): every whole-subspace operation is
+expressed as a `core.stream.SubspacePass` — ONE block-streamed read feeding
+any number of consumers per block visit, with the full pass's block list
+announced to `TieredStore.prefetch` up front so the backend's readahead
+window always has the true access pattern (this replaced the old per-group
+`_prefetch_group` hints; the small reductions mv_dot / mv_norm / clone_view
+previously streamed with no readahead at all). Pass-level rules:
+
+  * one `TieredStore.get` per block per pass, shared by all consumers —
+    `IOStats.passes` counts the streamed reads, so bytes-per-pass is
+    byte-exact and benchmarkable (`benchmarks/bench_subspace_io.py`);
+  * MvScale is *lazy* — a scalar per block folded into the shared
+    materialization (the paper's lazy evaluation, §3.4.4), zero I/O;
+  * `project_out` fuses a whole CGS step (h = Vᵀw, w ← w − V h) into one
+    read — `ortho.bcgs2(fused=True)` runs CGS2 in 2 subspace reads where
+    the unfused path pays 4;
+  * `compress` computes ALL restart output blocks in one streamed read
+    (multi-accumulator TSGEMM) instead of one full pass per output block;
+  * the newest block is pinned in the device tier (most-recent-block
+    cache) and the just-demoted predecessor's pages stay pinned in the
+    backend page cache (§3.4.4);
   * transpose/CloneView share `data_id` with their parent so the cache
-    recognizes identical bytes;
-  * grouped streaming reads ahead: before contracting group g the next
-    `readahead` groups' blocks are handed to `TieredStore.prefetch`, so
-    with the file backend (`TieredStore(backend="safs")`, §3.4.1) the
-    multi-worker readahead pool keeps page reads in flight under the JAX
-    compute of the current group (a no-op on the default ram backend).
-    The scheduler's own `depth` bounds how much of the announced pattern
-    is actually queued, so a deep `readahead` cannot thrash the cache.
+    recognizes identical bytes.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.stream import SubspacePass
 from repro.core.tiered import TieredStore, DEVICE, HOST
 from repro.kernels import ops as kops
 
@@ -39,6 +48,15 @@ class _Block:
     name: str
     ncols: int
     scale: float = 1.0   # lazy MvScale factor
+
+
+# Transient device-accumulator budget for one fused compress pass: every
+# output block of the pass stays resident (k·n·4 bytes for k columns), so
+# an unbounded single pass would OOM a billion-row restart. Under this cap
+# any laptop/bench-scale compress is still exactly one pass; past it the
+# output column groups chunk into ceil(k_keep·n·4 / cap) passes — still
+# far below the pre-fusion one-pass-per-output-block.
+COMPRESS_PASS_ACC_BYTES = 1 << 30
 
 
 class MultiVector:
@@ -84,15 +102,6 @@ class MultiVector:
     def _block_name(self, i: int) -> str:
         return self._blocks[i].name
 
-    def _prefetch_group(self, g0: int) -> None:
-        """Readahead: announce the next `readahead` groups' blocks to the
-        backend's scheduler (async I/O overlapping the current group's
-        compute; no-op on ram backend). The scheduler's depth bounds how
-        many are actually queued."""
-        self.store.prefetch(
-            [b.name for b in
-             self._blocks[g0:g0 + self.readahead * self.group_size]])
-
     def block(self, i: int) -> jnp.ndarray:
         """Materialize block i (applies any lazy scale)."""
         b = self._blocks[i]
@@ -105,8 +114,8 @@ class MultiVector:
         """Append a new rightmost block; pins it (most-recent-block cache)
         and demotes the previously pinned block to the host tier, pinning
         the demoted block's pages in the backend page cache (§3.4.4: it is
-        the newest on-"SSD" matrix, about to be re-read four times by the
-        CGS2 passes) until the next append supersedes it."""
+        the newest on-"SSD" matrix, about to be re-read by the CGS2
+        passes) until the next append supersedes it."""
         assert arr.shape[0] == self.n, (arr.shape, self.n)
         idx = len(self._blocks)
         name = f"{self.name}/b{idx}"
@@ -162,23 +171,16 @@ class MultiVector:
                      beta: float = 0.0, c0: jnp.ndarray | None = None
                      ) -> jnp.ndarray:
         """MvTimesMatAddMv: returns alpha * self @ small + beta * c0, where
-        small is (m, k). Streams blocks in groups (Fig. 5 decomposition):
-        each group contributes a partial product; only one group's blocks
-        are promoted at a time."""
+        small is (m, k). One streamed pass over the blocks."""
         m, k = small.shape
         assert m == self.ncols, (m, self.ncols)
-        acc = jnp.zeros((self.n, k), jnp.float32)
-        off = 0
-        for g0 in range(0, self.nblocks, self.group_size):
-            self._prefetch_group(g0 + self.group_size)
-            for i in range(g0, min(g0 + self.group_size, self.nblocks)):
-                b = self._blocks[i]
-                rows = small[off:off + b.ncols, :]
-                eff_alpha = alpha * b.scale
-                acc = kops.tsgemm(self.store.get(b.name), rows,
-                                  alpha=eff_alpha, beta=1.0, c0=acc,
-                                  impl=self.impl)
-                off += b.ncols
+        if self.nblocks == 0:
+            acc = jnp.zeros((self.n, k), jnp.float32)
+        else:
+            p = SubspacePass(self)
+            h = p.add_matmul(small, alpha=alpha)
+            p.run()
+            (acc,) = h.value
         if c0 is not None and beta != 0.0:
             acc = acc + beta * c0
         return acc
@@ -186,55 +188,71 @@ class MultiVector:
     def mv_trans_mv(self, other: jnp.ndarray, *, alpha: float = 1.0
                     ) -> jnp.ndarray:
         """MvTransMv: alpha * selfᵀ @ other → (m, k) small matrix.
-        Per-block Gram products streamed in groups; the right operand is
-        shared across groups (§3.4.3 shared-I/O optimization — it is read
-        once because it stays in the device tier)."""
-        parts = []
-        for i, b in enumerate(self._blocks):
-            if i % self.group_size == 0:
-                self._prefetch_group(i + self.group_size)
-            g = kops.gram(self.store.get(b.name), other,
-                          alpha=alpha * b.scale, impl=self.impl)
-            parts.append(g)
-        return jnp.concatenate(parts, axis=0)
+        One streamed pass; the right operand is shared across visits
+        (§3.4.3 shared-I/O optimization — it stays in the device tier)."""
+        p = SubspacePass(self)
+        h = p.add_gram(other, alpha=alpha)
+        p.run()
+        return h.value
+
+    def project_out(self, w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """One *fused* CGS step in a single streamed read: per block visit
+        h_i = V_iᵀw then w ← w − V_i h_i (block-MGS update order; the
+        telescoping w₀ = Σ V_i h_i + w keeps W = V·h + w exact). Returns
+        (h, w). The unfused equivalent (mv_trans_mv + mv_times_mat) reads
+        the subspace twice."""
+        p = SubspacePass(self)
+        h = p.add_project(w)
+        p.run()
+        return h.value
 
     def mv_add_mv(self, alpha: float, other: "MultiVector", beta: float
                   ) -> "MultiVector":
-        """MvAddMv: C <- alpha*A + beta*B (blockwise, same block structure)."""
+        """MvAddMv: C <- alpha*A + beta*B (blockwise, same block structure),
+        both operands streamed in lockstep with readahead."""
         assert self.block_widths() == other.block_widths()
         out = MultiVector(self.store, self.n, group_size=self.group_size,
                           readahead=self.readahead, impl=self.impl)
-        for i in range(self.nblocks):
-            out.append_block(alpha * self.block(i) + beta * other.block(i),
-                             pin_recent=False)
+        p = SubspacePass(self, peers=[other])
+
+        def emit(i, blk, peers):
+            out.append_block(alpha * blk + beta * peers[0], pin_recent=False)
+
+        p.add_visit(emit, axis=None)
+        p.run()
         return out
 
     def mv_dot(self, other: "MultiVector") -> jnp.ndarray:
         """MvDot: columnwise dot products vec[i] = selfᵀ[:,i] · other[:,i]."""
         assert self.block_widths() == other.block_widths()
-        outs = []
-        for i in range(self.nblocks):
-            outs.append(jnp.sum(self.block(i) * other.block(i), axis=0))
-        return jnp.concatenate(outs)
+        p = SubspacePass(self, peers=[other])
+        h = p.add_dot()
+        p.run()
+        return h.value
 
     def mv_norm(self) -> jnp.ndarray:
         """MvNorm: column 2-norms."""
-        outs = []
-        for i in range(self.nblocks):
-            outs.append(jnp.sqrt(jnp.sum(self.block(i) ** 2, axis=0)))
-        return jnp.concatenate(outs)
+        p = SubspacePass(self)
+        h = p.add_norm()
+        p.run()
+        return h.value
 
     def clone_view(self, idxs: Sequence[int]) -> jnp.ndarray:
-        """CloneView: gather a set of columns (materialized)."""
-        cols = []
-        off = 0
+        """CloneView: gather a set of columns (materialized, one pass)."""
         want = set(int(i) for i in idxs)
-        for i, b in enumerate(self._blocks):
-            local = [j for j in range(b.ncols) if off + j in want]
-            if local:
-                cols.append(self.block(i)[:, local])
+        offs, off = [], 0
+        for b in self._blocks:
+            offs.append(off)
             off += b.ncols
-        return jnp.concatenate(cols, axis=1)
+        p = SubspacePass(self)
+
+        def pick(i, blk, peers):
+            local = [j for j in range(blk.shape[1]) if offs[i] + j in want]
+            return blk[:, local] if local else None
+
+        h = p.add_visit(pick, axis=1)
+        p.run()
+        return h.value
 
     def conv_layout(self) -> jnp.ndarray:
         """ConvLayout: column-major subspace block → row-major operand for
@@ -243,23 +261,58 @@ class MultiVector:
         return self.block(self.nblocks - 1)
 
     # ------------------------------------------------------------ restart ops
-    def compress(self, q: jnp.ndarray, new_widths: Sequence[int]
+    def compress(self, q: jnp.ndarray, new_widths: Sequence[int], *,
+                 fused: bool = True, pass_acc_bytes: int | None = None
                  ) -> "MultiVector":
         """V_new = V @ Q for restart compression (Krylov–Schur). Q is
         (m, m_new); output blocks of widths new_widths. This is the big
-        out-of-core GEMM of the restart step — each output block is one
-        grouped mv_times_mat pass over the subspace."""
+        out-of-core GEMM of the restart step.
+
+        fused=True (default): ONE streamed read computes every output
+        block via multi-accumulator TSGEMM — the subspace is read exactly
+        once regardless of k_keep. The pass's output accumulators stay
+        device-resident (k·n·4 bytes of fast memory, the paper's TAS
+        working-set assumption); when k_keep·n·4 exceeds `pass_acc_bytes`
+        (default COMPRESS_PASS_ACC_BYTES, 1 GiB) the output column groups
+        chunk into the minimum number of passes that fit the budget.
+        fused=False keeps the pre-fusion path — one full grouped pass
+        *per output block* (k_keep/b subspace reads) — for parity tests
+        and the bench_subspace_io before/after column."""
         assert q.shape[0] == self.ncols
         assert sum(new_widths) == q.shape[1]
         out = MultiVector(self.store, self.n, group_size=self.group_size,
                           readahead=self.readahead, impl=self.impl)
-        off = 0
-        for w in new_widths:
-            blk = self.mv_times_mat(q[:, off:off + w])
-            out.append_block(blk, pin_recent=False)
-            off += w
+        if fused and self.nblocks:
+            budget = pass_acc_bytes or COMPRESS_PASS_ACC_BYTES
+            groups: List[List[int]] = [[]]
+            acc = 0
+            for w in new_widths:
+                if groups[-1] and (acc + w) * self.n * 4 > budget:
+                    groups.append([])
+                    acc = 0
+                groups[-1].append(w)
+                acc += w
+            off = 0
+            for gw in groups:
+                k = sum(gw)
+                p = SubspacePass(self)
+                h = p.add_matmul(q[:, off:off + k], gw)
+                p.run()
+                for blk in h.value:
+                    out.append_block(blk, pin_recent=False)
+                off += k
+        else:
+            off = 0
+            for w in new_widths:
+                blk = self.mv_times_mat(q[:, off:off + w])
+                out.append_block(blk, pin_recent=False)
+                off += w
         return out
 
     def to_dense(self) -> jnp.ndarray:
-        return jnp.concatenate([self.block(i) for i in range(self.nblocks)],
-                               axis=1)
+        if self.nblocks == 0:
+            return jnp.zeros((self.n, 0), jnp.float32)
+        p = SubspacePass(self)
+        h = p.add_visit(lambda i, blk, peers: blk, axis=1)
+        p.run()
+        return h.value

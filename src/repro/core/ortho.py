@@ -9,9 +9,16 @@ We provide the TPU-native primitives:
               host-side factorization) replacing Householder QR.
   * svqb    — Stathopoulos–Wu SVQB, rank-revealing fallback when the block
               is numerically rank deficient.
-  * bcgs2   — block classical Gram–Schmidt (×2) of a new block against an
-              out-of-core MultiVector basis: two passes of
-              MvTransMv/MvTimesMatAddMv — exactly the paper's I/O pattern.
+  * bcgs2   — block Gram–Schmidt (×2) of a new block against an
+              out-of-core MultiVector basis. fused=True (default) runs
+              each pass as ONE streamed subspace read
+              (`MultiVector.project_out`: h_i = V_iᵀw and w ← w − V_i h_i
+              in the same block visit), so CGS2 costs 2 reads of the
+              on-SSD subspace; fused=False keeps the textbook
+              MvTransMv + MvTimesMatAddMv pair per pass (4 reads) — the
+              paper's unfused I/O pattern, retained for parity testing
+              and the bench_subspace_io before/after column (§3.4.3:
+              minimizing passes over the subspace is the whole game).
 """
 from __future__ import annotations
 
@@ -72,25 +79,36 @@ def svqb(x: jnp.ndarray, *, impl: kops.Impl = "auto", tol: float = 1e-10
     return q, int(jnp.sum(keep))
 
 
-def bcgs2(basis: MultiVector, w: jnp.ndarray, *, impl: kops.Impl = "auto"
+def bcgs2(basis: MultiVector, w: jnp.ndarray, *, impl: kops.Impl = "auto",
+          fused: bool = True
           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Orthogonalize block W against the out-of-core basis V, twice, then
     orthonormalize within the block (CholQR).
 
     Returns (Q, H, R):  W = V @ H + Q @ R,  VᵀQ = 0,  QᵀQ = I.
-    H is (m, b) — the projection coefficients (Krylov H entries).
+    H is (m, b) — the projection coefficients (Krylov H entries). This is
+    the ONE convention: H = h1 + h2 including the second-pass correction,
+    so the Krylov invariant holds with the returned H exactly.
 
-    I/O pattern per pass: one streamed MvTransMv read of the whole basis +
-    one streamed MvTimesMatAddMv read — matches §3.4.3's grouped streaming.
+    I/O per pass: fused=True streams the basis once (`project_out` — the
+    Gram and the AXPY update share the block visit; block-MGS order, so
+    W = V·h + w stays exact by telescoping); fused=False streams it twice
+    (MvTransMv then MvTimesMatAddMv — classical CGS order). Both yield
+    the same Q/H/R to rounding; CGS2's second pass wipes the O(eps·κ)
+    first-pass difference either way.
     """
     if basis.nblocks == 0:
         q, r = cholqr(w, impl=impl)
         h = jnp.zeros((0, w.shape[1]), jnp.float32)
         return q, h, r
-    h1 = basis.mv_trans_mv(w)                     # VᵀW
-    w = w - basis.mv_times_mat(h1)                # W -= V (VᵀW)
-    h2 = basis.mv_trans_mv(w)                     # second pass (CGS2)
-    w = w - basis.mv_times_mat(h2)
+    if fused:
+        h1, w = basis.project_out(w)              # one streamed read
+        h2, w = basis.project_out(w)              # second pass (CGS2)
+    else:
+        h1 = basis.mv_trans_mv(w)                 # VᵀW
+        w = w - basis.mv_times_mat(h1)            # W -= V (VᵀW)
+        h2 = basis.mv_trans_mv(w)
+        w = w - basis.mv_times_mat(h2)
     q, r = cholqr(w, impl=impl)
     return q, h1 + h2, r
 

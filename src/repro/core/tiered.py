@@ -16,6 +16,10 @@ Either way `stats` stays byte-exact *logical* tier traffic, so the paper's
 Table-3 read/write claims are validated quantitatively by the benchmarks;
 with safs the backend's own `stats` additionally count physical disk bytes
 (endurance — less than logical whenever the page cache absorbs re-reads).
+`stats.passes` additionally counts streamed whole-subspace reads
+(`begin_pass`, driven by `core.stream.SubspacePass`) — the §3.4.3 unit the
+pass-fusion work minimizes; `benchmarks/bench_subspace_io.py` archives
+reads-per-expansion and reads-per-restart off these counters.
 
 Policies implemented from §3.4.4:
   * most-recent-block caching — the newest subspace block stays in the
@@ -31,6 +35,7 @@ Policies implemented from §3.4.4:
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Iterable, Optional
 
 import jax
@@ -55,9 +60,21 @@ class IOStats:
     host_writes: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    passes: int = 0                # streamed whole-subspace reads (§3.4.3)
+    pass_bytes_read: int = 0       # host bytes read INSIDE those passes
+
+    def bytes_per_pass(self) -> float:
+        """Average slow-tier bytes read per streamed subspace pass — the
+        §3.4.3 figure of merit (fusion shrinks `passes` while the bytes
+        of the surviving passes stay put). Attributed: only bytes read
+        inside SubspacePass runs count — operator tile / streamed-image
+        reads sharing the store do not dilute the figure."""
+        return self.pass_bytes_read / max(self.passes, 1)
 
     def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["bytes_per_pass"] = self.bytes_per_pass()
+        return d
 
 
 @dataclasses.dataclass
@@ -88,31 +105,39 @@ class TieredStore:
         self.stats = IOStats()
         self.backend = make_backend(backend, **(backend_opts or {}))
         self._entries: Dict[str, _Entry] = {}
-        self._lru: list[str] = []   # oldest first
+        self._lru: "OrderedDict[str, None]" = OrderedDict()  # oldest first
         self._pinned: set[str] = set()
         self._recent_host_id: str | None = None  # page-cache pin (§3.4.4)
+        self._device_nbytes = 0     # running counter — no per-op full scans
 
     # -- residency accounting -------------------------------------------------
     def device_bytes(self) -> int:
-        return sum(e.nbytes for e in self._entries.values() if e.tier == DEVICE)
+        return self._device_nbytes
 
     def host_bytes(self) -> int:
         return sum(e.nbytes for e in self._entries.values() if e.has_host)
 
     def _touch(self, name: str) -> None:
         if name in self._lru:
-            self._lru.remove(name)
-        self._lru.append(name)
+            self._lru.move_to_end(name)
+        else:
+            self._lru[name] = None
 
     def _evict_for(self, incoming: int) -> None:
-        while (self.device_bytes() + incoming > self.device_budget
-               and any(n not in self._pinned and self._entries[n].tier == DEVICE
-                       for n in self._lru)):
-            for name in self._lru:
-                e = self._entries[name]
-                if e.tier == DEVICE and name not in self._pinned:
-                    self.demote(name)
-                    break
+        if self._device_nbytes + incoming <= self.device_budget:
+            return
+        for name in list(self._lru):                # oldest first
+            if self._device_nbytes + incoming <= self.device_budget:
+                break
+            e = self._entries[name]
+            if e.tier == DEVICE and name not in self._pinned:
+                self.demote(name)
+
+    def _drop_entry(self, name: str, e: "_Entry") -> None:
+        # an entry leaving the table (delete / overwrite) releases its
+        # device residency from the running counter
+        if e.tier == DEVICE:
+            self._device_nbytes -= e.nbytes
 
     # -- core API --------------------------------------------------------------
     def put(self, name: str, value: jnp.ndarray, *, tier: str = DEVICE,
@@ -124,11 +149,19 @@ class TieredStore:
                 f"chunk; per-chunk dirty tracking is not implemented — "
                 f"rebuild the operator instead of writing through it)")
         nbytes = int(np.prod(value.shape)) * value.dtype.itemsize
+        if prev is not None:
+            # retire the stale entry wholly before eviction runs, so
+            # _evict_for can neither demote the about-to-be-replaced bytes
+            # nor double-release them from the running counter
+            self._drop_entry(name, prev)
+            del self._entries[name]
+            self._lru.pop(name, None)
         if tier == DEVICE:
             self._evict_for(nbytes)
             self._entries[name] = _Entry(data_id or name, DEVICE,
                                          jnp.asarray(value), False, nbytes,
                                          True, readonly)
+            self._device_nbytes += nbytes
         else:
             e = _Entry(data_id or name, HOST, None, True, nbytes, False,
                        readonly)
@@ -158,6 +191,7 @@ class TieredStore:
         val = self.get(name)
         self._evict_for(e.nbytes)
         e.device_val, e.tier, e.dirty = val, DEVICE, False
+        self._device_nbytes += e.nbytes
         return val
 
     def demote(self, name: str) -> None:
@@ -171,6 +205,7 @@ class TieredStore:
             self.stats.host_bytes_written += e.nbytes
             self.stats.host_writes += 1
         e.device_val, e.tier, e.dirty = None, HOST, False
+        self._device_nbytes -= e.nbytes
 
     def host_pin(self, name: str) -> None:
         """Pin `name`'s pages in the backend page cache until the next
@@ -198,8 +233,9 @@ class TieredStore:
 
     def delete(self, name: str) -> None:
         e = self._entries.pop(name, None)
-        if name in self._lru:
-            self._lru.remove(name)
+        if e is not None:
+            self._drop_entry(name, e)
+        self._lru.pop(name, None)
         self._pinned.discard(name)
         if e is not None and not any(o.data_id == e.data_id
                                      for o in self._entries.values()):
@@ -215,6 +251,22 @@ class TieredStore:
         return self._entries[name].tier
 
     # -- streaming helpers ------------------------------------------------------
+    def begin_pass(self) -> int:
+        """Mark the start of one streamed whole-subspace read (called by
+        `core.stream.SubspacePass.run`). `stats.passes` then counts the
+        §3.4.3 unit of cost — full passes over the on-SSD subspace.
+        Returns the host_bytes_read watermark; hand it back to `end_pass`
+        so `pass_bytes_read` attributes exactly the bytes the pass itself
+        streamed (matrix-image reads sharing the store stay excluded)."""
+        self.stats.passes += 1
+        return self.stats.host_bytes_read
+
+    def end_pass(self, read_watermark: int) -> None:
+        """Close the pass opened by `begin_pass`, attributing the bytes
+        read since the watermark to `stats.pass_bytes_read`."""
+        self.stats.pass_bytes_read += (self.stats.host_bytes_read
+                                       - read_watermark)
+
     def prefetch(self, names: Iterable[str]) -> None:
         """Hint the backend to stage host-tier entries' pages ahead of the
         next grouped pass (async; a no-op on the ram backend)."""

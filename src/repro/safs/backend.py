@@ -344,8 +344,26 @@ class SafsBackend:
         self.cache.unpin(data_id)
 
     def prefetch(self, data_ids) -> None:
-        if self.enable_prefetch:
-            self.prefetcher.schedule([d for d in data_ids if self.has(d)])
+        """Queue readahead fills. Files whose every page is already cache-
+        resident are skipped (O(1) per id off the cache's per-file
+        counters): a fused pass announces its FULL block list up front
+        (`core.stream.SubspacePass`), and without the skip the cached
+        prefix of the pattern would burn the scheduler's bounded window
+        on no-op fills while the blocks that actually need disk reads get
+        dropped past it."""
+        if not self.enable_prefetch:
+            return
+        todo = []
+        for d in data_ids:
+            with self._lock:
+                pf = self._files.get(d)
+            if pf is None:
+                continue
+            if self.cache.resident_pages(d) >= pf.n_pages:
+                continue
+            todo.append(d)
+        if todo:
+            self.prefetcher.schedule(todo)
 
     def flush(self, data_id: str | None = None) -> int:
         """Write back all dirty pages (journaled per file), drain the

@@ -63,6 +63,7 @@ class PageCache:
         self._writer = writer
         self._lines: "OrderedDict[Key, _Line]" = OrderedDict()
         self._pinned: set[str] = set()
+        self._per_file: Dict[str, int] = {}   # resident pages per data_id
         self.stats = IOStats()
         self._lock = threading.RLock()
 
@@ -94,6 +95,7 @@ class PageCache:
         by_file: Dict[str, Dict[int, bytes]] = {}
         for key in victims:
             line = self._lines.pop(key)
+            self._dec_per_file(key[0])
             if line.dirty:
                 by_file.setdefault(key[0], {})[key[1]] = line.data
         for d, pages in by_file.items():
@@ -120,6 +122,21 @@ class PageCache:
         """Residency probe without touching LRU order or stats (prefetch)."""
         with self._lock:
             return (data_id, page) in self._lines
+
+    def resident_pages(self, data_id: str) -> int:
+        """How many of a file's pages are resident — O(1) off a running
+        per-file counter (the backend's prefetch uses it to skip
+        fully-cached files instead of probing every page)."""
+        with self._lock:
+            return self._per_file.get(data_id, 0)
+
+    def _dec_per_file(self, data_id: str) -> None:
+        # caller holds the lock
+        left = self._per_file.get(data_id, 0) - 1
+        if left > 0:
+            self._per_file[data_id] = left
+        else:
+            self._per_file.pop(data_id, None)
 
     def put_clean_if(self, data_id: str, page: int, data: bytes,
                      fresh) -> bool:
@@ -152,6 +169,7 @@ class PageCache:
             if key not in self._lines:
                 self._evict_for(1)
                 self._lines[key] = _Line(data, dirty)
+                self._per_file[data_id] = self._per_file.get(data_id, 0) + 1
             else:
                 line = self._lines[key]
                 if dirty:
@@ -207,6 +225,7 @@ class PageCache:
                         self.stats.host_bytes_written += n
                         self.stats.host_writes += 1
                 del self._lines[key]
+                self._dec_per_file(data_id)
             self._pinned.discard(data_id)
 
     def fill_bytes_read(self, n: int) -> None:

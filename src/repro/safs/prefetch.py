@@ -12,8 +12,10 @@ the full readahead scheduler the paper's SAFS actually runs:
     in the backend — coalesced preadv runs, not a python page loop);
     the queue is bounded by `depth` files — the readahead window. Ids
     past the window are *dropped*, not queued: the caller re-announces
-    its access pattern every group (`MultiVector._prefetch_group`), so a
-    dropped id is simply re-offered when the window has advanced. This
+    its access pattern as the walk advances (`core.stream.SubspacePass`
+    announces the full pass up front, then re-offers the sliding window
+    each block visit), so a dropped id is re-offered once the window has
+    advanced. This
     bounds both queue memory and cache thrash from overly deep readahead;
   * workers fill the shared PageCache with clean lines only (prefetch is
     read-only — it never dirties a page);

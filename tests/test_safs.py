@@ -314,6 +314,14 @@ def test_prefetch_staging_is_correct_and_counted(disk_tmp):
     for k, a in arrs.items():
         store.put(k, jnp.asarray(a), tier=HOST)
     store.flush()
+    # fully cache-resident files are SKIPPED in O(1) (a fused full-pass
+    # announcement must not burn the readahead window on no-op fills) ...
+    store.prefetch(list(arrs))
+    store.backend.prefetcher.drain()
+    assert store.backend.prefetcher.stats()["files_prefetched"] == 0
+    # ... and once the pages are gone, the same announcement stages them
+    for k in arrs:
+        store.backend.cache.invalidate(k)
     store.prefetch(list(arrs))
     store.backend.prefetcher.drain()
     assert store.backend.prefetcher.stats()["files_prefetched"] >= 1
