@@ -64,3 +64,23 @@ validate(metrics)
 print("BENCH_dist_e2e.json: parity/eigenvalue fields present, "
       f"max_rel_err={metrics['parity']['max_rel_err']:.3e}")
 EOF
+
+# Smoke-sized solver-family comparison (PR 6): Krylov–Schur vs LOBPCG
+# behind `core.solver.solve` on the same safs-backed store —
+# bytes-per-converged-pair, streamed-pass accounting, spectrum parity
+# (KS vs LOBPCG, and LOBPCG safs vs RAM), archived in
+# results/BENCH_solver_family.json. The bench self-validates; the explicit
+# check below re-gates the archived JSON (required fields + parity rtol).
+echo "== bench_eigen solver-family smoke (results/BENCH_solver_family.json) =="
+TMPDIR="$DISK_TMP" python benchmarks/bench_eigen.py --smoke
+python - <<'EOF'
+import json
+from benchmarks.bench_eigen import validate
+with open("results/BENCH_solver_family.json") as f:
+    metrics = json.load(f)
+validate(metrics)
+fam = metrics["family"]
+print("BENCH_solver_family.json: both methods converged, "
+      f"ks-vs-lobpcg rel_err={fam['spectrum_max_rel_err']:.3e}, "
+      f"lobpcg safs-vs-ram rel_err={fam['lobpcg_safs_vs_ram_rel_err']:.3e}")
+EOF

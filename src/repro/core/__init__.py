@@ -3,19 +3,29 @@ from repro.core.tiered import (TieredStore, IOStats, DEVICE, HOST,
                                ReadOnlyError)
 from repro.core.multivector import MultiVector
 from repro.core.stream import SubspacePass
-from repro.core.ortho import cholqr, svqb, bcgs2, ortho_error
+from repro.core.ortho import cholqr, svqb, svqb_transform, bcgs2, ortho_error
 from repro.core.operator import (GraphOperator, NormalOperator, DenseOperator,
-                                 HvpOperator, LinearOperator)
+                                 HvpOperator, LinearOperator,
+                                 ShiftInvertOperator, ChebyshevFilterOperator,
+                                 estimate_spectral_range, capabilities,
+                                 CAP_FUSED_EXPAND, CAP_SPECTRAL_TRANSFORM)
 from repro.core.krylov_schur import eigsh
 from repro.core.lanczos import lanczos_eigsh
+from repro.core.lobpcg import lobpcg
 from repro.core.svd import svds, SvdResult
+from repro.core.solver import (Solver, SolverContext, register_solver,
+                               solve, solver_names)
 from repro.core.residuals import EigResult, true_residuals
 
 __all__ = [
     "TieredStore", "IOStats", "DEVICE", "HOST", "ReadOnlyError",
     "MultiVector", "SubspacePass",
-    "cholqr", "svqb", "bcgs2", "ortho_error",
+    "cholqr", "svqb", "svqb_transform", "bcgs2", "ortho_error",
     "GraphOperator", "NormalOperator", "DenseOperator", "HvpOperator",
-    "LinearOperator", "eigsh", "lanczos_eigsh", "svds", "SvdResult",
+    "LinearOperator", "ShiftInvertOperator", "ChebyshevFilterOperator",
+    "estimate_spectral_range", "capabilities",
+    "CAP_FUSED_EXPAND", "CAP_SPECTRAL_TRANSFORM",
+    "eigsh", "lanczos_eigsh", "lobpcg", "svds", "SvdResult",
+    "Solver", "SolverContext", "register_solver", "solve", "solver_names",
     "EigResult", "true_residuals",
 ]

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.multivector import MultiVector
+from repro.core.operator import CAP_FUSED_EXPAND, capabilities
 from repro.core.ortho import cholqr, bcgs2
 from repro.core.residuals import EigResult, ritz_residual_bounds, sort_ritz
 from repro.core.tiered import TieredStore
@@ -44,7 +45,7 @@ def _expand(op, v: MultiVector, q: jnp.ndarray, h: np.ndarray,
       * local: semi-external SpMM then `ortho.bcgs2` over the out-of-core
         subspace — two streamed reads of V when fused_passes (each CGS
         pass is one `SubspacePass` read, §3.4.3), four when not;
-      * operator-fused (advertises `supports_fused_expand`, e.g. the
+      * operator-fused (declares the `fused_expand` capability, e.g. the
         sharded `dist.DistOperator`): one combined SpMM+CGS2/CholQR2 step
         over the operator's device-resident subspace shards — V's blocks
         are *not* re-read from the store at all; the MultiVector is the
@@ -53,7 +54,7 @@ def _expand(op, v: MultiVector, q: jnp.ndarray, h: np.ndarray,
     """
     b = q.shape[1]
     v.append_block(q)
-    if getattr(op, "supports_fused_expand", False):
+    if CAP_FUSED_EXPAND in capabilities(op):
         q_next, h_col, r_next = op.fused_expand(v, q)
     else:
         w = op.matmat(q)                               # semi-external SpMM

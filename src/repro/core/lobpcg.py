@@ -1,40 +1,91 @@
-"""Block LOBPCG — the other Anasazi-family solver (paper §2, and the one
-Zhou et al. [31] ran on SSD clusters).
+"""Block LOBPCG on the streamed-pass substrate — the other Anasazi-family
+solver (paper §2, and the one Zhou et al. [31] ran on SSD clusters).
 
 Locally-optimal block preconditioned conjugate gradient: the subspace per
-iteration is span[X, R, P] (current block, residuals, search directions) —
-only 3·b vectors resident, no growing Krylov basis. That is the opposite
-I/O trade from Krylov–Schur: LOBPCG keeps the fast tier tiny but applies
-the operator every iteration without restart compression; the paper picks
+iteration is span[X, W, P] (Ritz block, preconditioned residuals, search
+directions) — only 3·b basis vectors, no growing Krylov history. That is
+the opposite I/O trade from Krylov–Schur: there is no restart compression
+and no history to reorthogonalize against, but the operator is applied
+every iteration and the whole [X, W, P] basis (plus its A-images) streams
+from the slow tier several times per iteration. The paper picks
 Krylov–Schur because on power-law graphs the total streamed bytes end up
-lower. Having both on the same MultiVector/TieredStore substrate lets the
-benchmarks make that comparison quantitatively.
+lower — with both solvers on the same MultiVector/TieredStore substrate
+that claim is a benchmark (`benchmarks/bench_eigen.py --smoke` →
+results/BENCH_solver_family.json), not a docstring assertion.
+
+Out-of-core layout: two 3-block MultiVectors hold the basis S = [X, W, P]
+and its images AS = [AX, AW, AP]; every block is written through to the
+slow tier immediately (`_put_spilled` = write + demote), so the pass
+accounting below is byte-exact on ANY device budget. A-images are
+maintained algebraically — every linear transform applied to a basis
+block is co-applied to its image (`ortho.svqb_transform`) — so the
+operator runs exactly once per iteration (on W).
+
+Streamed passes per iteration (fused_passes=True), B = n·b·4 bytes:
+
+  residual pass   reads X ⊕ AX                 (2 blocks, 2B)
+                  → Rayleigh quotients, residual norms, W candidate
+  gram pass       reads [X, W (, P)] ⊕ images  (4B at it 0, else 6B)
+                  → inline P deflation (ortho vs X, W + SVQB, transforms
+                    co-applied to AP, write-back), then G = SᵀS, H = SᵀAS
+  update pass     reads the same blocks        (4B / 6B)
+                  → four accumulators in one read: X' = S·y_x,
+                    P' = S·y_p, AX' = AS·y_x, AP' = AS·y_p
+
+so a run that converges at iteration `it` (the check fires after the
+residual pass; it ≥ 1) costs exactly
+
+  passes     = 3·it + 1
+  pass bytes = (10 + 14·(it − 1) + 2) · B
+
+— asserted byte-exactly by tests/test_extensions.py on the ram AND safs
+backends (assuming P never fully deflates, which drops the 2B P⊕AP share
+of the gram/update passes for that iteration). fused_passes=False splits
+every consumer into its own single-consumer pass — deflation walk, G
+walk, S⊕AS walk for H, one pass per update accumulator: 8 passes and 29B
+per full iteration — the unfused reference for parity tests and the I/O
+benches.
 
 Supports largest ('LA') / smallest ('SA') algebraic eigenpairs and an
-optional preconditioner callable.
+optional preconditioner callable. The preconditioner runs outside the
+passes and must not touch the solver's TieredStore, or the accounting
+above stops being attributable.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ortho import svqb
+from repro.core.multivector import MultiVector
+from repro.core.ortho import svqb, svqb_transform
 from repro.core.residuals import EigResult
+from repro.core.stream import SubspacePass
 from repro.core.tiered import TieredStore
 from repro.kernels import ops as kops
 
 
-def _rayleigh_ritz(s_blocks, a_s_blocks, nev: int, which: str):
-    """Small dense RR on the [X R P] subspace (m ≤ 3b)."""
-    s = jnp.concatenate(s_blocks, axis=1)
-    a_s = jnp.concatenate(a_s_blocks, axis=1)
-    g = np.asarray(kops.gram(s, s, impl="ref"), np.float64)
-    h = np.asarray(kops.gram(s, a_s, impl="ref"), np.float64)
+def _put_spilled(mv: MultiVector, i: int, arr: jnp.ndarray) -> None:
+    """Write block i (append when it doesn't exist yet) and immediately
+    demote it: the basis lives on "SSD", every pass read is a host read,
+    and the module-docstring pass accounting holds on any device budget."""
+    if i < mv.nblocks:
+        mv.set_block(i, arr)
+    else:
+        assert i == mv.nblocks, (i, mv.nblocks)
+        mv.append_block(arr, pin_recent=False)
+    mv.store.demote(mv._block_name(i))
+
+
+def _rayleigh_ritz(g: np.ndarray, h: np.ndarray, which: str
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense RR on the [X W P] Grams (m ≤ 3b): the generalized symmetric
+    problem H y = G y θ via Cholesky whitening with an escalating-jitter
+    ladder (the basis is deflated, but can still be borderline near
+    convergence)."""
     h = 0.5 * (h + h.T)
-    # generalized symmetric eigenproblem h y = g y θ via Cholesky whitening
     tr = np.trace(g) / g.shape[0]
     l = None
     for jitter in (1e-10, 1e-7, 1e-4, 1e-2):
@@ -53,71 +104,271 @@ def _rayleigh_ritz(s_blocks, a_s_blocks, nev: int, which: str):
     return theta[order], y[:, order]
 
 
+def _deflate_p(x, ax, w, aw, p, ap, impl
+               ) -> Tuple[Optional[jnp.ndarray], Optional[jnp.ndarray]]:
+    """Orthogonalize P against X and W, then SVQB; every transform is
+    co-applied to AP so the image stays exact with zero operator applies.
+    Returns (None, None) when P is numerically rank deficient after
+    deflation — the caller drops P from this iteration's basis instead of
+    letting zero columns poison the RR Gram."""
+    c = kops.gram(x, p, impl=impl)
+    p = kops.tsgemm(x, c, alpha=-1.0, beta=1.0, c0=p, impl=impl)
+    ap = kops.tsgemm(ax, c, alpha=-1.0, beta=1.0, c0=ap, impl=impl)
+    c = kops.gram(w, p, impl=impl)
+    p = kops.tsgemm(w, c, alpha=-1.0, beta=1.0, c0=p, impl=impl)
+    ap = kops.tsgemm(aw, c, alpha=-1.0, beta=1.0, c0=ap, impl=impl)
+    t, rank = svqb_transform(p, impl=impl)
+    if rank < p.shape[1]:
+        return None, None
+    return kops.tsgemm(p, t, impl=impl), kops.tsgemm(ap, t, impl=impl)
+
+
+def _assemble_grams(held: List[Tuple[jnp.ndarray, jnp.ndarray]], impl
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    s_mat = jnp.concatenate([t[0] for t in held], axis=1)
+    as_mat = jnp.concatenate([t[1] for t in held], axis=1)
+    g = np.asarray(kops.gram(s_mat, s_mat, impl=impl), np.float64)
+    h = np.asarray(kops.gram(s_mat, as_mat, impl=impl), np.float64)
+    return g, h
+
+
+def _gram_fused(s, a_s, have_p, impl) -> Tuple[np.ndarray, np.ndarray, bool]:
+    """ONE multi-consumer streamed pass: basis blocks and their images
+    (peers, lockstep) stream once; the P visit deflates the search
+    directions in place (write-back via `_put_spilled`), then G and H
+    assemble from the pass's materialized blocks. The full 3+3 block
+    working set stays device-resident for the pass — that IS the LOBPCG
+    memory model (3·b vectors of fast memory, paper §2)."""
+    held: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+    gp = SubspacePass(s, peers=[a_s],
+                      block_ids=[0, 1, 2] if have_p else [0, 1])
+
+    def visit(i, blk, peers):
+        img = peers[0]
+        if i == 2:
+            (x, ax), (w, aw) = held[0], held[1]
+            blk, img = _deflate_p(x, ax, w, aw, blk, img, impl)
+            if blk is None:
+                return
+            _put_spilled(s, 2, blk)
+            _put_spilled(a_s, 2, img)
+        held.append((blk, img))
+
+    gp.add_visit(visit, axis=None)
+    gp.run()
+    g, h = _assemble_grams(held, impl)
+    return g, h, len(held) == 3
+
+
+def _gram_unfused(s, a_s, have_p, impl
+                  ) -> Tuple[np.ndarray, np.ndarray, bool]:
+    """Same results as `_gram_fused` as single-consumer passes: a
+    deflation walk (write-back), a basis walk for G, a basis⊕image walk
+    for H — three subspace reads where the fused pass pays one."""
+    use_p = have_p
+    if have_p:
+        held: List = []
+        dp = SubspacePass(s, peers=[a_s], block_ids=[0, 1, 2])
+
+        def deflate(i, blk, peers):
+            if i < 2:
+                held.append((blk, peers[0]))
+                return
+            p, ap = _deflate_p(held[0][0], held[0][1], held[1][0],
+                               held[1][1], blk, peers[0], impl)
+            held.append(p)
+            if p is not None:
+                _put_spilled(s, 2, p)
+                _put_spilled(a_s, 2, ap)
+
+        dp.add_visit(deflate, axis=None)
+        dp.run()
+        use_p = held[2] is not None
+    ids = [0, 1, 2] if use_p else [0, 1]
+
+    g_pass = SubspacePass(s, block_ids=ids)
+    hg = g_pass.add_visit(lambda i, blk, peers: blk, axis=1)
+    g_pass.run()
+    s_mat = hg.value
+    g = np.asarray(kops.gram(s_mat, s_mat, impl=impl), np.float64)
+
+    h_pass = SubspacePass(s, peers=[a_s], block_ids=ids)
+    hh = h_pass.add_visit(lambda i, blk, peers: (blk, peers[0]), axis=None)
+    h_pass.run()
+    sm = jnp.concatenate([t[0] for t in hh.value], axis=1)
+    am = jnp.concatenate([t[1] for t in hh.value], axis=1)
+    h = np.asarray(kops.gram(sm, am, impl=impl), np.float64)
+    return g, h, use_p
+
+
+def _update_fused(s, a_s, y_x, y_p, ids, impl) -> List[jnp.ndarray]:
+    """ONE streamed read of basis⊕images filling four accumulators:
+    X' = S·y_x, P' = S·y_p, AX' = AS·y_x, AP' = AS·y_p."""
+    widths = s.block_widths()
+    offs, off = {}, 0
+    for i in ids:
+        offs[i] = off
+        off += widths[i]
+    n, b = s.n, y_x.shape[1]
+    accs = [jnp.zeros((n, b), jnp.float32) for _ in range(4)]
+    up = SubspacePass(s, peers=[a_s], block_ids=ids)
+
+    def visit(i, blk, peers):
+        rows = slice(offs[i], offs[i] + widths[i])
+        for j, (src, small) in enumerate(((blk, y_x), (blk, y_p),
+                                          (peers[0], y_x), (peers[0], y_p))):
+            accs[j] = kops.tsgemm(src, small[rows], beta=1.0, c0=accs[j],
+                                  impl=impl)
+
+    up.add_visit(visit, axis=None)
+    up.run()
+    return accs
+
+
+def _update_unfused(s, a_s, y_x, y_p, ids, impl) -> List[jnp.ndarray]:
+    outs = []
+    for mv, small in ((s, y_x), (s, y_p), (a_s, y_x), (a_s, y_p)):
+        up = SubspacePass(mv, block_ids=ids)
+        h = up.add_matmul(small)
+        up.run()
+        outs.append(h.value[0])
+    return outs
+
+
 def lobpcg(op, nev: int, *, block_size: int | None = None,
            tol: float = 1e-6, max_iters: int = 200, which: str = "LA",
            precond: Callable | None = None,
            store: TieredStore | None = None, seed: int = 0,
-           impl: kops.Impl = "ref") -> EigResult:
+           impl: kops.Impl = "ref", fused_passes: bool = True,
+           group_size: int = 8, stall_iters: int = 8,
+           callback: Callable | None = None) -> EigResult:
+    """Compute `nev` eigenpairs by block LOBPCG with the [X, W, P] basis
+    streamed from the TieredStore (pass accounting: module docstring).
+
+    which: 'LA' (largest algebraic) or 'SA' (smallest). LOBPCG optimizes
+    an extreme Rayleigh quotient, so 'LM' has no natural meaning here —
+    wrap the operator in a spectral transform instead (`core.operator.
+    ShiftInvertOperator` / `ChebyshevFilterOperator` via `core.solve`).
+
+    stall_iters: stagnation guard. The f32 residual floor can sit above
+    `tol`; once it is reached, W is pure rounding noise and further
+    iterations slowly poison the RR basis — under which='LA' the spurious
+    Ritz values are then SELECTED into X and the solve diverges. After
+    `stall_iters` iterations without residual improvement the loop exits
+    (converged=False unless `tol` was met) and the BEST iterate seen —
+    not the last — is returned.
+
+    callback(it, theta[:nev], res[:nev]) fires once per iteration right
+    after the residual pass — the solver-family telemetry hook
+    (`core.solver.SolverContext.callback`).
+    """
+    if which not in ("LA", "SA"):
+        raise ValueError(f"lobpcg supports which='LA'|'SA', got {which!r}")
     b = block_size or nev
     assert b >= nev
     store = store or TieredStore()
     n = op.n
+
     key = jax.random.PRNGKey(seed)
-    x = jax.random.normal(key, (n, b), jnp.float32)
-    x, _ = svqb(x, impl=impl)
-    p = None
-    n_ops = 0
+    x, _ = svqb(jax.random.normal(key, (n, b), jnp.float32), impl=impl)
+    ax = op.matmat(x)
+    n_ops = 1
+    s = MultiVector(store, n, group_size=group_size, impl=impl)
+    a_s = MultiVector(store, n, group_size=group_size, impl=impl)
+    _put_spilled(s, 0, x)
+    _put_spilled(a_s, 0, ax)
+
+    have_p = False
     theta = np.zeros(b)
     res_norms = np.full(b, np.inf)
+    converged = False
+    it = 0
+    best = np.inf
+    stall = 0
+    best_x, best_theta, best_res = x, theta[:nev], res_norms[:nev]
 
     for it in range(max_iters):
-        ax = op.matmat(x)
-        n_ops += 1
-        # accounting: X/R/P round-trip the store once per iteration (the
-        # LOBPCG working set — 3 blocks — is what lives in fast memory)
-        store.put("lobpcg/x", x)
-        theta_x = np.asarray(jnp.sum(x * ax, axis=0), np.float64)
-        r = ax - x * jnp.asarray(theta_x, jnp.float32)[None, :]
-        res_norms = np.asarray(jnp.linalg.norm(r, axis=0))
-        scale = np.maximum(1.0, np.abs(theta_x))
-        if bool((res_norms[:nev] <= tol * scale[:nev]).all()) and it > 0:
-            theta = theta_x
+        # --- residual pass: one streamed read of X ⊕ AX ------------------
+        rp = SubspacePass(s, peers=[a_s], block_ids=[0])
+        hr = rp.add_visit(lambda i, blk, peers: (blk, peers[0]), axis=None)
+        rp.run()
+        x, ax = hr.value[0]
+        theta_f = jnp.sum(x * ax, axis=0)       # Rayleigh (X orthonormal)
+        theta = np.asarray(theta_f, np.float64)
+        r = ax - x * theta_f[None, :]           # f32 end to end (the seed
+        # bounced theta through f64 and back per column right here)
+        res_norms = np.asarray(jnp.linalg.norm(r, axis=0), np.float64)
+        scale = np.maximum(1.0, np.abs(theta))
+        if callback is not None:
+            callback(it, theta[:nev].copy(), res_norms[:nev].copy())
+        cur = float(np.max(res_norms[:nev] / scale[:nev]))
+        if cur < best * (1.0 - 1e-3):
+            best, stall = cur, 0
+            best_x = x
+            best_theta = theta[:nev].copy()
+            best_res = res_norms[:nev].copy()
+        else:
+            stall += 1
+        if it > 0 and bool((res_norms[:nev] <= tol * scale[:nev]).all()):
+            converged = True
             break
-        w = precond(r) if precond is not None else r
-        # orthogonalize the residual block against X (keeps the RR Gram
-        # well-conditioned — standard LOBPCG practice)
-        w = w - x @ kops.gram(x, w, impl=impl)
-        w, _ = svqb(w, impl=impl)
-        aw = op.matmat(w)
-        n_ops += 1
+        if stall >= stall_iters:
+            break               # f32 floor reached — stop before the noise
+            # W blocks degrade the basis (see docstring)
 
-        s_blocks = [x, w]
-        a_blocks = [ax, aw]
-        if p is not None:
-            p_o = p - x @ kops.gram(x, p, impl=impl)
-            p_o = p_o - w @ kops.gram(w, p_o, impl=impl)
-            p_o, rank = svqb(p_o, impl=impl)
-            if rank > 0:
-                s_blocks.append(p_o)
-                a_blocks.append(op.matmat(p_o))
-                n_ops += 1
-        theta_all, y = _rayleigh_ritz(s_blocks, a_blocks, nev, which)
-        yb = jnp.asarray(y[:, :b], jnp.float32)
-        s = jnp.concatenate(s_blocks, axis=1)
-        x_new = s @ yb
-        # search direction: the R/P contribution to the update
-        y_rp = yb.at[:b, :].set(0.0) if hasattr(yb, "at") else yb
-        p = s @ y_rp
-        x, _ = svqb(x_new, impl=impl)
+        # --- residual block W: precondition, deflate vs X, renormalize ---
+        w = precond(r) if precond is not None else r
+        w = kops.tsgemm(x, kops.gram(x, w, impl=impl), alpha=-1.0,
+                        beta=1.0, c0=w, impl=impl)
+        w, _ = svqb(w, impl=impl)
+        aw = op.matmat(w)                       # the ONLY operator apply
+        n_ops += 1
+        _put_spilled(s, 1, w)
+        _put_spilled(a_s, 1, aw)
+
+        # --- gram pass: P deflation + G = SᵀS, H = SᵀAS ------------------
+        gram = _gram_fused if fused_passes else _gram_unfused
+        g, h, use_p = gram(s, a_s, have_p, impl)
+
+        theta_all, y = _rayleigh_ritz(g, h, which)
+        y_x = y[:, :b]
+        y_p = y_x.copy()
+        y_p[:b, :] = 0.0
+        # ^ the search direction is the (W, P) share of the update only:
+        #   zeroing the X rows in numpy replaces the seed's dead
+        #   `hasattr(yb, "at")` fallback whose else-branch silently kept
+        #   the X contribution in P
+        y_x = jnp.asarray(y_x, jnp.float32)
+        y_p = jnp.asarray(y_p, jnp.float32)
+
+        # --- update pass: four accumulators from one read ----------------
+        ids = [0, 1, 2] if use_p else [0, 1]
+        upd = _update_fused if fused_passes else _update_unfused
+        x, p_new, ax, ap_new = upd(s, a_s, y_x, y_p, ids, impl)
+        # X' = S·y_x is G-orthonormal by RR construction (the whitening is
+        # measured from the actual blocks each iteration, so orthogonality
+        # errors do not accumulate). Do NOT re-run SVQB here: on an
+        # already-near-orthonormal block its Gram is I + f32 noise, whose
+        # eigenvector factor is an arbitrary dense rotation — it scrambles
+        # the Ritz columns into mixtures and the per-column residual check
+        # never fires (the seed solver had exactly this bug and reached
+        # max_iters on every nontrivial problem).
+        _put_spilled(s, 0, x)
+        _put_spilled(a_s, 0, ax)
+        _put_spilled(s, 2, p_new)
+        _put_spilled(a_s, 2, ap_new)
+        have_p = True
         theta = theta_all[:b]
 
-    vec = np.asarray(x[:, :nev])
+    if converged:
+        vec, lam, rn = x[:, :nev], theta[:nev], res_norms[:nev]
+    else:                       # stall / max_iters: best iterate, not last
+        vec, lam, rn = best_x[:, :nev], best_theta, best_res
     return EigResult(
-        eigenvalues=np.asarray(theta[:nev]),
-        eigenvectors=vec,
-        residuals=res_norms[:nev],
+        eigenvalues=np.asarray(lam),
+        eigenvectors=np.asarray(vec),
+        residuals=np.asarray(rn),
         n_restarts=it, n_ops=n_ops, m_subspace=3 * b,
-        converged=bool((res_norms[:nev]
-                        <= tol * np.maximum(1.0, np.abs(theta[:nev]))).all()),
+        converged=converged,
         io_stats=store.stats.as_dict(),
     )

@@ -160,12 +160,26 @@ class MultiVector:
                 b.scale *= float(f)
 
     def mv_scale_diag(self, vec: jnp.ndarray) -> None:
-        """MvScale2: BB <- AA diag(vec) — materializes (per-column scales)."""
-        off = 0
-        for i, b in enumerate(self._blocks):
-            blk = self.block(i) * vec[off:off + b.ncols][None, :]
-            self.set_block(i, blk)
+        """MvScale2: BB <- AA diag(vec) — materializes (per-column scales).
+        One streamed pass (full block list announced to the readahead
+        window up front); each visit writes its scaled block back in
+        place. Previously this was a bare get/put loop with no prefetch
+        announcement at all."""
+        if self.nblocks == 0:
+            return
+        offs, off = [], 0
+        for b in self._blocks:
+            offs.append(off)
             off += b.ncols
+
+        p = SubspacePass(self)
+
+        def scale(i, blk, peers):
+            w = self._blocks[i].ncols
+            self.set_block(i, blk * vec[offs[i]:offs[i] + w][None, :])
+
+        p.add_visit(scale, axis=None)
+        p.run()
 
     def mv_times_mat(self, small: jnp.ndarray, *, alpha: float = 1.0,
                      beta: float = 0.0, c0: jnp.ndarray | None = None

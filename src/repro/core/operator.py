@@ -9,11 +9,28 @@ Three first-class implementations (DESIGN.md §4):
   HvpOperator     Hessian-vector products of a model loss — the beyond-paper
                   integration that points the eigensolver at the LM substrate
                   (loss-curvature spectra).
+
+Plus the composable *spectral transforms* every solver of the family
+inherits through the same `matmat` seam (the Anasazi OperatorTraits idiom
+of paper §2):
+
+  ShiftInvertOperator     (A − σI)⁻¹ via an inner blocked CG/CGNR on the
+                          wrapped operator's matmat — interior / smallest
+                          eigenpairs with which="LM" on the transform.
+  ChebyshevFilterOperator p(A) with p a Chebyshev polynomial damping a
+                          measured spectral interval — polynomial filtering
+                          for the same interior/edge modes without a solve.
+
+Operators *declare* what they can do through `capabilities()` (see below);
+solvers dispatch on the declared set instead of sniffing attributes, so a
+transform wrapping e.g. the sharded `dist.DistOperator` explicitly drops
+the fused-expansion capability (the fused SpMM+CGS2 program computes A·q,
+not f(A)·q) rather than silently keeping or losing it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Protocol
+from typing import Callable, List, Protocol, Tuple
 
 import jax
 import jax.flatten_util
@@ -31,6 +48,39 @@ class LinearOperator(Protocol):
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
         """Y = A @ X for a TAS block X (n, b)."""
         ...
+
+
+# --------------------------------------------------------------- capabilities
+# Declared operator capabilities — the protocol the solver family dispatches
+# on (replaces per-call-site getattr sniffing of `supports_fused_expand`):
+#
+#   CAP_FUSED_EXPAND        the operator runs one whole expansion step
+#                           (SpMM + CGS2 + CholQR2) itself via
+#                           `fused_expand(v, q)` — dist.DistOperator.
+#   CAP_SPECTRAL_TRANSFORM  matmat applies f(A), not A: the operator wraps
+#                           an `.inner` operator and offers
+#                           `untransform(theta, vecs)` to map Ritz values
+#                           of f(A) back to eigenvalues of A.
+CAP_FUSED_EXPAND = "fused_expand"
+CAP_SPECTRAL_TRANSFORM = "spectral_transform"
+
+
+def capabilities(op) -> frozenset:
+    """The operator's declared capability set.
+
+    Operators declare via a `capabilities` method (or attribute). Operators
+    predating the protocol are adapted here — the legacy
+    `supports_fused_expand` attribute sniff lives in THIS function only,
+    so call sites (krylov_schur._expand) stay protocol-pure.
+    """
+    declared = getattr(op, "capabilities", None)
+    if declared is not None and not isinstance(declared, property):
+        caps = declared() if callable(declared) else declared
+        return frozenset(caps)
+    caps = set()
+    if getattr(op, "supports_fused_expand", False):
+        caps.add(CAP_FUSED_EXPAND)
+    return frozenset(caps)
 
 
 @dataclasses.dataclass
@@ -270,3 +320,195 @@ class HvpOperator:
         if self.n == self.n_logical:
             return hv
         return jnp.pad(hv, ((0, self.n - self.n_logical), (0, 0)))
+
+
+# ---------------------------------------------------------------- transforms
+def _rayleigh_eigenvalues(inner, vecs) -> np.ndarray:
+    """λ_i = v_iᵀ A v_i / v_iᵀ v_i — recover original-operator eigenvalues
+    from a transform's Ritz vectors (one extra inner matmat)."""
+    v = jnp.asarray(vecs, jnp.float32)
+    av = inner.matmat(v)
+    num = jnp.sum(v * av, axis=0)
+    den = jnp.sum(v * v, axis=0)
+    return np.asarray(num / jnp.maximum(den, 1e-30), np.float64)
+
+
+class ShiftInvertOperator:
+    """(A − σI)⁻¹ as a LinearOperator: interior/smallest eigenpairs for the
+    whole solver family through the matmat seam.
+
+    Eigenvalues map as μ = 1/(λ − σ), so the λ nearest σ become the largest
+    |μ| — run any solver with which="LM" on the transform and the wanted
+    interior modes converge first. `untransform` maps Ritz values back
+    (Rayleigh quotients on the inner operator when vectors are available —
+    more accurate than σ + 1/μ once the inner solves are inexact).
+
+    Each matmat solves (A − σI) Y = X blocked over the columns with an
+    inner Krylov iteration on the *wrapped* operator's matmat:
+
+      inner="cg"    plain conjugate gradients — fastest, but requires the
+                    shifted operator to be definite (σ outside the
+                    spectrum: smallest/largest-eigenpair use);
+      inner="cgnr" (default) CG on the squared system
+                    (A − σI)² Y = (A − σI) X — SPD for ANY σ that is not
+                    exactly an eigenvalue, so interior shifts are safe at
+                    the cost of two inner matmats per iteration (and a
+                    squared condition number).
+
+    Composes with any inner operator, including `dist.DistOperator` —
+    the declared capability set is {spectral_transform} only: the inner
+    operator's fused-expansion program computes A·q, not (A−σI)⁻¹·q, so
+    the transform drops CAP_FUSED_EXPAND *explicitly* (solvers fall back
+    to the streamed bcgs2 path by protocol, not by silent getattr miss).
+    """
+
+    def __init__(self, inner, sigma: float, *, inner_solver: str = "cgnr",
+                 cg_tol: float = 1e-8, cg_maxiter: int = 400):
+        if inner_solver not in ("cg", "cgnr"):
+            raise ValueError(f"inner_solver must be cg|cgnr, "
+                             f"got {inner_solver!r}")
+        self.inner = inner
+        self.sigma = float(sigma)
+        self.n = inner.n
+        self.inner_solver = inner_solver
+        self.cg_tol = float(cg_tol)
+        self.cg_maxiter = int(cg_maxiter)
+        self.n_inner_iters = 0      # total inner CG iterations (telemetry)
+
+    def capabilities(self) -> frozenset:
+        return frozenset({CAP_SPECTRAL_TRANSFORM})
+
+    def _shifted(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.inner.matmat(x) - self.sigma * x
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        x = jnp.asarray(x, jnp.float32)
+        if self.inner_solver == "cg":
+            apply_fn, rhs = self._shifted, x
+        else:                                   # CGNR: (A−σ)² y = (A−σ) x
+            apply_fn = lambda v: self._shifted(self._shifted(v))  # noqa: E731
+            rhs = self._shifted(x)
+        y, iters = _block_cg(apply_fn, rhs, tol=self.cg_tol,
+                             maxiter=self.cg_maxiter)
+        self.n_inner_iters += iters
+        return y
+
+    def untransform(self, theta, vecs=None) -> np.ndarray:
+        if vecs is not None:
+            return _rayleigh_eigenvalues(self.inner, vecs)
+        mu = np.asarray(theta, np.float64)
+        safe = np.where(np.abs(mu) > 1e-300, mu, 1e-300)
+        return self.sigma + 1.0 / safe
+
+
+def _block_cg(apply_fn, b: jnp.ndarray, *, tol: float, maxiter: int
+              ) -> Tuple[jnp.ndarray, int]:
+    """CG on an SPD apply_fn, all columns of b advanced together (per-column
+    step sizes). Columns that converge early just keep taking ~zero-length
+    steps; the loop exits when the worst column is under tol."""
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = jnp.sum(r * r, axis=0)
+    b_norm = jnp.sqrt(jnp.maximum(jnp.sum(b * b, axis=0), 1e-30))
+    it = 0
+    for it in range(1, maxiter + 1):
+        ap = apply_fn(p)
+        denom = jnp.sum(p * ap, axis=0)
+        alpha = jnp.where(jnp.abs(denom) > 1e-30, rs / denom, 0.0)
+        x = x + p * alpha[None, :]
+        r = r - ap * alpha[None, :]
+        rs_new = jnp.sum(r * r, axis=0)
+        if float(jnp.max(jnp.sqrt(rs_new) / b_norm)) <= tol:
+            rs = rs_new
+            break
+        beta = jnp.where(rs > 1e-30, rs_new / rs, 0.0)
+        p = r + p * beta[None, :]
+        rs = rs_new
+    return x, it
+
+
+class ChebyshevFilterOperator:
+    """p(A) with p = T_deg ∘ affine: polynomial spectral filter.
+
+    The affine map sends the *damped* interval [lo, hi] onto [−1, 1] where
+    Chebyshev polynomials stay bounded by 1; eigenvalues outside the
+    interval are amplified like cosh(deg·acosh|t(λ)|) — exponentially in
+    the degree. Damping the unwanted part of a measured spectral range
+    (`estimate_spectral_range`) therefore turns edge/interior modes into
+    the dominant eigenvalues of p(A), reachable with which="LM" by any
+    solver — no linear solves, `degree` inner matmats per application.
+
+    Like ShiftInvertOperator this is a declared spectral transform:
+    `untransform` recovers λ via Rayleigh quotients on the inner operator
+    (T_deg is not invertible — the polynomial value alone cannot identify
+    λ, so vectors are required).
+    """
+
+    def __init__(self, inner, interval: Tuple[float, float], *,
+                 degree: int = 10):
+        lo, hi = float(interval[0]), float(interval[1])
+        if not hi > lo:
+            raise ValueError(f"damped interval must have hi > lo, "
+                             f"got ({lo}, {hi})")
+        self.inner = inner
+        self.n = inner.n
+        self.lo, self.hi = lo, hi
+        self.degree = int(degree)
+
+    def capabilities(self) -> frozenset:
+        return frozenset({CAP_SPECTRAL_TRANSFORM})
+
+    def _mapped(self, x: jnp.ndarray) -> jnp.ndarray:
+        c = 0.5 * (self.lo + self.hi)
+        e = 0.5 * (self.hi - self.lo)
+        return (self.inner.matmat(x) - c * x) / e
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        t_prev = jnp.asarray(x, jnp.float32)
+        t_cur = self._mapped(t_prev)
+        for _ in range(self.degree - 1):
+            t_prev, t_cur = t_cur, 2.0 * self._mapped(t_cur) - t_prev
+        return t_cur
+
+    def untransform(self, theta, vecs=None) -> np.ndarray:
+        if vecs is None:
+            raise ValueError("ChebyshevFilterOperator.untransform needs the "
+                             "Ritz vectors (the polynomial is not invertible)"
+                             " — solve with compute_eigenvectors=True")
+        return _rayleigh_eigenvalues(self.inner, vecs)
+
+
+def estimate_spectral_range(op, *, iters: int = 30, seed: int = 0,
+                            safety: float = 0.05) -> Tuple[float, float]:
+    """Cheap [λmin, λmax] estimate for filter construction: `iters` steps
+    of scalar Lanczos (full reorthogonalization, host-side tridiagonal),
+    widened by the last off-diagonal coupling plus a relative `safety`
+    margin so the true extremes stay inside the returned interval."""
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (op.n, 1), jnp.float32)
+    v = v / jnp.linalg.norm(v)
+    basis = [v]
+    alphas: List[float] = []
+    betas: List[float] = []
+    beta = 0.0
+    for _ in range(iters):
+        w = op.matmat(basis[-1])
+        alpha = float(jnp.sum(basis[-1] * w))
+        alphas.append(alpha)
+        for u in basis:                       # full reorth — iters is tiny
+            w = w - u * jnp.sum(u * w)
+        beta = float(jnp.linalg.norm(w))
+        if beta < 1e-12:
+            beta = 0.0
+            break
+        betas.append(beta)
+        basis.append(w / beta)
+    t = np.diag(np.asarray(alphas))
+    if len(alphas) > 1:
+        off = np.asarray(betas[:len(alphas) - 1])
+        t += np.diag(off, 1) + np.diag(off, -1)
+    ritz = np.linalg.eigvalsh(t)
+    lo, hi = float(ritz[0]) - beta, float(ritz[-1]) + beta
+    pad = safety * max(abs(lo), abs(hi), 1e-30)
+    return lo - pad, hi + pad

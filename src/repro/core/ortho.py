@@ -63,10 +63,16 @@ def cholqr(x: jnp.ndarray, *, impl: kops.Impl = "auto", iters: int = 2
     return q, r_total
 
 
-def svqb(x: jnp.ndarray, *, impl: kops.Impl = "auto", tol: float = 1e-10
-         ) -> Tuple[jnp.ndarray, int]:
-    """SVQB orthonormalization; returns (Q, numerical_rank). Rank-deficient
-    directions are replaced by zero columns (caller refreshes them)."""
+def svqb_transform(x: jnp.ndarray, *, impl: kops.Impl = "auto",
+                   tol: float = 1e-10) -> Tuple[jnp.ndarray, int]:
+    """The SVQB basis transform T (b×b) with Q = X @ T orthonormal on the
+    numerical range of X; returns (T, numerical_rank). Rank-deficient
+    directions map to zero columns of Q.
+
+    Exposed separately from `svqb` so callers can co-apply the SAME
+    transform to a parallel image of the block: LOBPCG maintains AS
+    algebraically (AX ← AX·T whenever X ← X·T), which keeps the A-images
+    exact without any extra operator applies."""
     g = kops.gram(x, x, impl=impl)
     d = jnp.sqrt(jnp.clip(jnp.diag(g), 1e-30, None))
     dinv = 1.0 / d
@@ -75,8 +81,15 @@ def svqb(x: jnp.ndarray, *, impl: kops.Impl = "auto", tol: float = 1e-10
     keep = w > tol * jnp.max(w)
     winv = jnp.where(keep, 1.0 / jnp.sqrt(jnp.clip(w, 1e-30, None)), 0.0)
     t = (dinv[:, None] * v) * winv[None, :]
-    q = kops.tsgemm(x, t, impl=impl)
-    return q, int(jnp.sum(keep))
+    return t, int(jnp.sum(keep))
+
+
+def svqb(x: jnp.ndarray, *, impl: kops.Impl = "auto", tol: float = 1e-10
+         ) -> Tuple[jnp.ndarray, int]:
+    """SVQB orthonormalization; returns (Q, numerical_rank). Rank-deficient
+    directions are replaced by zero columns (caller refreshes them)."""
+    t, rank = svqb_transform(x, impl=impl, tol=tol)
+    return kops.tsgemm(x, t, impl=impl), rank
 
 
 def bcgs2(basis: MultiVector, w: jnp.ndarray, *, impl: kops.Impl = "auto",

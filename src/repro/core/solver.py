@@ -1,0 +1,242 @@
+"""The pluggable solver family — one protocol over the streamed substrate.
+
+The paper frames FlashEigen as an Anasazi-framework extension (§2):
+Krylov–Schur, Block Davidson and LOBPCG are interchangeable *solver
+managers* over the same MultiVector/SpMM traits. This module is that seam
+for the repo: every eigensolver registers as a `Solver` implementation and
+drivers call
+
+    solve(op, nev, method="krylov_schur" | "lanczos" | "lobpcg" | "svd")
+
+instead of hard-coding one algorithm. All implementations share the same
+substrate contract through `SolverContext`:
+
+  operator    any `LinearOperator` (GraphOperator, DistOperator, HvpOperator,
+              a spectral transform, ...) — consulted for declared
+              capabilities (`core.operator.capabilities`), never sniffed;
+  store       the `TieredStore` holding every out-of-core block the method
+              allocates, so `EigResult.io_stats` is comparable across
+              methods (bytes-per-converged-pair is the paper's real
+              question — `benchmarks/bench_eigen.py` measures it);
+  ortho       the orthogonalization policy ("fused" streams each CGS /
+              gram / update step as one multi-consumer `SubspacePass`;
+              "unfused" keeps the single-consumer reference passes);
+  which/tol/max_iters and the convergence state they imply;
+  callback    per-restart (or per-iteration) telemetry
+              `callback(step, theta[:nev], res[:nev])` for convergence
+              traces without re-running.
+
+Spectral transforms compose at this layer: when the operator declares
+`CAP_SPECTRAL_TRANSFORM` (ShiftInvertOperator, ChebyshevFilterOperator),
+`solve` runs the chosen method on the transform — `which` then selects in
+the *transformed* spectrum, "LM" being the natural choice since both
+transforms map wanted eigenvalues to dominant ones — and afterwards maps
+the Ritz values back through `op.untransform` and replaces the cheap
+residual bounds with true residuals measured against the *inner* operator,
+so the returned `EigResult` always describes eigenpairs of A itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Protocol
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.krylov_schur import eigsh
+from repro.core.lanczos import lanczos_eigsh
+from repro.core.lobpcg import lobpcg
+from repro.core.operator import CAP_SPECTRAL_TRANSFORM, capabilities
+from repro.core.residuals import EigResult
+from repro.core.svd import svds
+from repro.core.tiered import TieredStore
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class SolverContext:
+    """Everything a solver implementation receives: the operator, the
+    shared block substrate, the ortho policy, the convergence targets and
+    the telemetry hook. One context = one solve."""
+    op: object
+    nev: int
+    which: str
+    tol: float
+    max_iters: int
+    store: TieredStore
+    block_size: Optional[int] = None
+    ortho: str = "fused"                  # "fused" | "unfused" pass policy
+    impl: kops.Impl = "auto"
+    seed: int = 0
+    compute_eigenvectors: bool = True
+    callback: Optional[Callable] = None
+    options: Dict = dataclasses.field(default_factory=dict)
+    # method-specific extras (num_blocks, precond, at_op, ...)
+
+    @property
+    def fused_passes(self) -> bool:
+        return self.ortho == "fused"
+
+
+class Solver(Protocol):
+    """A solver implementation: a name for the registry plus a solve
+    entrypoint. Implementations are thin adapters over the algorithm
+    modules — the algorithms stay importable and testable on their own."""
+    name: str
+
+    def solve(self, ctx: SolverContext) -> EigResult:
+        ...
+
+
+class _KrylovSchur:
+    name = "krylov_schur"
+    default_which = "LM"
+
+    def solve(self, ctx: SolverContext) -> EigResult:
+        return eigsh(
+            ctx.op, ctx.nev, block_size=ctx.block_size or 4,
+            num_blocks=ctx.options.get("num_blocks"),
+            tol=ctx.tol, max_restarts=ctx.max_iters, which=ctx.which,
+            store=ctx.store, impl=ctx.impl, seed=ctx.seed,
+            group_size=ctx.options.get("group_size", 8),
+            compute_eigenvectors=ctx.compute_eigenvectors,
+            fused_passes=ctx.fused_passes, callback=ctx.callback)
+
+
+class _Lanczos:
+    name = "lanczos"
+    default_which = "LM"
+
+    def solve(self, ctx: SolverContext) -> EigResult:
+        return lanczos_eigsh(
+            ctx.op, ctx.nev, block_size=ctx.block_size or 4,
+            num_blocks=ctx.options.get("num_blocks"), which=ctx.which,
+            store=ctx.store, impl=ctx.impl, seed=ctx.seed,
+            group_size=ctx.options.get("group_size", 8),
+            compute_eigenvectors=ctx.compute_eigenvectors,
+            fused_passes=ctx.fused_passes)
+
+
+class _Lobpcg:
+    name = "lobpcg"
+    default_which = "LA"
+
+    def solve(self, ctx: SolverContext) -> EigResult:
+        return lobpcg(
+            ctx.op, ctx.nev, block_size=ctx.block_size,
+            tol=ctx.tol, max_iters=ctx.max_iters, which=ctx.which,
+            precond=ctx.options.get("precond"), store=ctx.store,
+            seed=ctx.seed, impl=ctx.impl, fused_passes=ctx.fused_passes,
+            group_size=ctx.options.get("group_size", 8),
+            callback=ctx.callback)
+
+
+class _Svd:
+    """`svd.svds` behind the family dispatch: eigensolve of AᵀA via the
+    Krylov–Schur manager, σ = √λ. Requires `at_op` (the Aᵀ operator) in
+    ctx.options; the returned EigResult carries σ as `eigenvalues` and U
+    as `eigenvectors` (use `svd.svds` directly for the full triplet)."""
+    name = "svd"
+    default_which = "LA"
+
+    def solve(self, ctx: SolverContext) -> EigResult:
+        at_op = ctx.options.get("at_op")
+        if at_op is None:
+            raise ValueError("method='svd' needs options={'at_op': <Aᵀ op>}")
+        r = svds(ctx.op, at_op, ctx.nev, block_size=ctx.block_size or 2,
+                 num_blocks=ctx.options.get("num_blocks"), tol=ctx.tol,
+                 max_restarts=ctx.max_iters, store=ctx.store, impl=ctx.impl,
+                 seed=ctx.seed, compute_vectors=ctx.compute_eigenvectors)
+        return EigResult(
+            eigenvalues=r.s, eigenvectors=r.u,
+            residuals=np.zeros_like(r.s), n_restarts=r.n_restarts,
+            n_ops=r.n_ops, m_subspace=0, converged=r.converged,
+            io_stats=r.io_stats)
+
+
+_REGISTRY: Dict[str, Solver] = {}
+
+
+def register_solver(solver: Solver) -> None:
+    """Add (or replace) a family member. Exposed so experiments can
+    register e.g. a Block-Davidson prototype without touching core."""
+    _REGISTRY[solver.name] = solver
+
+
+def solver_names() -> list:
+    return sorted(_REGISTRY)
+
+
+for _s in (_KrylovSchur(), _Lanczos(), _Lobpcg(), _Svd()):
+    register_solver(_s)
+
+
+def _untransform(op, res: EigResult) -> EigResult:
+    """Map an EigResult computed on a spectral transform back to the inner
+    operator: eigenvalues via `op.untransform` (Rayleigh quotients on the
+    inner operator when vectors were materialized), residuals re-measured
+    against the inner operator (the solver's cheap bounds were residuals
+    of f(A), which say nothing quantitative about A)."""
+    vecs = res.eigenvectors
+    lam = op.untransform(res.eigenvalues,
+                         None if vecs is None else jnp.asarray(vecs))
+    if vecs is None:
+        return dataclasses.replace(res, eigenvalues=lam)
+    x = jnp.asarray(vecs, jnp.float32)
+    ax = op.inner.matmat(x)
+    th = jnp.asarray(lam, jnp.float32)
+    resid = np.asarray(jnp.linalg.norm(ax - x * th[None, :], axis=0),
+                       np.float64)
+    return dataclasses.replace(res, eigenvalues=lam, residuals=resid)
+
+
+def solve(op, nev: int, *, method: str = "krylov_schur",
+          which: str | None = None, tol: float = 1e-6,
+          max_iters: int = 60, block_size: int | None = None,
+          store: TieredStore | None = None, ortho: str = "fused",
+          impl: kops.Impl = "auto", seed: int = 0,
+          compute_eigenvectors: bool = True,
+          callback: Callable | None = None, **options) -> EigResult:
+    """Solve for `nev` eigenpairs of `op` with the chosen family member.
+
+    method: one of `solver_names()` — "krylov_schur" (the paper's driver),
+    "lanczos" (HEIGEN-style no-restart baseline), "lobpcg" (3·b working
+    set, out-of-core [X, W, P]), "svd" (AᵀA Gram path; needs
+    options={'at_op': ...}).
+
+    which defaults per method ("LM" for the Krylov solvers, "LA" for
+    LOBPCG/svd). When `op` declares CAP_SPECTRAL_TRANSFORM, `which`
+    selects in the transformed spectrum (default "LM": both transforms
+    map the wanted part of the spectrum to dominant eigenvalues) and the
+    result is mapped back to eigenpairs of the inner operator — so e.g.
+
+        solve(ShiftInvertOperator(a_op, sigma), nev, method="lobpcg")
+
+    returns the `nev` eigenvalues of A nearest sigma, ordered by
+    proximity, with true A-residuals.
+
+    All remaining keyword arguments land in `SolverContext.options`
+    (num_blocks, group_size, precond, at_op, ...).
+    """
+    if method not in _REGISTRY:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"registered: {solver_names()}")
+    solver = _REGISTRY[method]
+    is_transform = CAP_SPECTRAL_TRANSFORM in capabilities(op)
+    if which is None:
+        which = "LM" if is_transform else getattr(solver, "default_which",
+                                                  "LM")
+    if is_transform and method == "lobpcg" and which == "LM":
+        # LOBPCG optimizes an algebraic extreme; for the transforms LM ≈ LA
+        # (shift-invert near a dominant σ-neighborhood, Chebyshev filters
+        # are ≥ 1 on the wanted set) — take the algebraic top.
+        which = "LA"
+    ctx = SolverContext(
+        op=op, nev=nev, which=which, tol=tol, max_iters=max_iters,
+        store=store or TieredStore(), block_size=block_size, ortho=ortho,
+        impl=impl, seed=seed, compute_eigenvectors=compute_eigenvectors,
+        callback=callback, options=options)
+    res = solver.solve(ctx)
+    if is_transform:
+        res = _untransform(op, res)
+    return res

@@ -96,7 +96,7 @@ class _Matmul(_Consumer):
 
     def __init__(self, small, row_offsets, out_widths, alpha, n, impl):
         self.small = small
-        self.row_offsets = row_offsets      # per input block
+        self.row_offsets = row_offsets      # block index -> row offset
         self.alpha, self.impl = alpha, impl
         self.out_cols: List[slice] = []
         off = 0
@@ -180,14 +180,24 @@ class SubspacePass:
     walk; it defaults to the MultiVector's group-level readahead
     (`readahead * group_size` blocks — the same depth the retired
     `_prefetch_group` maintained).
+
+    `block_ids` restricts the walk to a subset of blocks (in the given
+    order); visitors still receive the *original* block index. LOBPCG's
+    residual pass reads only the X block of its [X, W, P] basis this way
+    instead of paying a full-basis read.
     """
 
     def __init__(self, mv, *, peers: Sequence = (),
-                 readahead: int | None = None):
+                 readahead: int | None = None,
+                 block_ids: Sequence[int] | None = None):
         self.mv = mv
         self.peers = list(peers)
         for p in self.peers:
             assert p.nblocks == mv.nblocks, (p.nblocks, mv.nblocks)
+        self.block_ids = (list(range(mv.nblocks)) if block_ids is None
+                          else [int(i) for i in block_ids])
+        for i in self.block_ids:
+            assert 0 <= i < mv.nblocks, (i, mv.nblocks)
         self.store = mv.store
         if readahead is None:
             readahead = mv.readahead * mv.group_size * (1 + len(self.peers))
@@ -211,16 +221,20 @@ class SubspacePass:
         accumulators, one per entry of out_widths (default: one output of
         small's full width). All outputs stay device-resident for the
         pass, so a caller splitting very wide products should bound
-        out_widths per pass (MultiVector.compress does)."""
+        out_widths per pass (MultiVector.compress does). On a restricted
+        walk (`block_ids`), `small`'s rows span the visited blocks only,
+        stacked in walk order."""
         m, k = small.shape
-        assert m == self.mv.ncols, (m, self.mv.ncols)
+        widths = self.mv.block_widths()
+        m_visited = sum(widths[i] for i in self.block_ids)
+        assert m == m_visited, (m, m_visited)
         if out_widths is None:
             out_widths = [k]
         assert sum(out_widths) == k, (out_widths, k)
-        offsets, off = [], 0
-        for w in self.mv.block_widths():
-            offsets.append(off)
-            off += w
+        offsets, off = {}, 0
+        for i in self.block_ids:
+            offsets[i] = off
+            off += widths[i]
         return self._attach(_Matmul(small, offsets, out_widths, alpha,
                                     self.mv.n, self.mv.impl))
 
@@ -246,7 +260,7 @@ class SubspacePass:
     # ------------------------------------------------------------------ run
     def _names(self) -> List[str]:
         names = []
-        for i in range(self.mv.nblocks):
+        for i in self.block_ids:
             names.append(self.mv._block_name(i))
             for p in self.peers:
                 names.append(p._block_name(i))
@@ -265,7 +279,7 @@ class SubspacePass:
         if names:
             self.store.prefetch(names)      # whole pass announced up front
         pos = 0
-        for i in range(mv.nblocks):
+        for i in self.block_ids:
             if self.readahead:
                 # re-offer the window: ids past the backend's readahead
                 # depth were dropped at announce time and re-queue here

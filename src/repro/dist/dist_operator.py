@@ -20,8 +20,10 @@ The split of residencies mirrors the paper exactly:
     SAFS page files), and restart compression / eigenvector
     materialization stream it back — "subspace on SSD".
 
-`eigsh` discovers the fused path through the `supports_fused_expand`
-attribute and calls `fused_expand(v, q)` instead of separate
+`eigsh` discovers the fused path through the declared `fused_expand`
+capability (`core.operator.capabilities`; the legacy
+`supports_fused_expand` attribute is kept for external callers) and calls
+`fused_expand(v, q)` instead of separate
 matmat/mv_trans_mv/mv_times_mat/cholqr calls; the device shard cache is
 reconciled against `MultiVector.block_names()`, so restarts (which replace
 every block) and fresh solves rebuild it transparently.
@@ -73,7 +75,13 @@ class DistOperator:
     eigenvalue 0 — harmless for the paper's "LM"/"LA" workloads).
     """
 
+    # legacy attribute kept for external callers; solvers dispatch on the
+    # declared capability set below (core.operator.capabilities)
     supports_fused_expand = True
+
+    def capabilities(self) -> frozenset:
+        from repro.core.operator import CAP_FUSED_EXPAND
+        return frozenset({CAP_FUSED_EXPAND})
 
     def __init__(self, n: int, rows, cols, vals, *, mesh=None,
                  compressed: bool = False, pod_compressed: bool = False,

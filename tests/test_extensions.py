@@ -1,7 +1,10 @@
 """LOBPCG + paged-KV serving extensions."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 import scipy.sparse as sp
 import scipy.sparse.linalg as spla
 
@@ -11,11 +14,26 @@ from repro.graphs import pack_tiles
 from repro.serve.paged_kv import PagedConfig, PagedKVCache
 
 
-def test_lobpcg_vs_scipy(small_graph):
+def _tiles(small_graph):
     n, r, c, v, a = small_graph
-    tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    return n, a, pack_tiles(n, n, r, c, v, block_shape=(64, 64),
+                            min_block_nnz=4)
+
+
+def _lobpcg_expected_io(it: int, n: int, b: int, fused: bool):
+    """The module-docstring accounting for a run that converges at
+    iteration `it` (≥ 1) with P never fully deflating; B = n·b·4."""
+    bb = n * b * 4
+    if fused:
+        return 3 * it + 1, (10 + 14 * (it - 1) + 2) * bb
+    return 8 * it, (16 + 29 * (it - 1) + 2) * bb
+
+
+def test_lobpcg_vs_scipy(small_graph):
+    n, a, tm = _tiles(small_graph)
     res = lobpcg(GraphOperator(tm, impl="ref"), 4, block_size=8,
                  tol=1e-4, max_iters=300, which="LA")
+    assert res.converged
     w = np.sort(spla.eigsh(a, k=4, which="LA", return_eigenvectors=False))
     np.testing.assert_allclose(np.sort(res.eigenvalues), w,
                                rtol=1e-3, atol=1e-3)
@@ -24,11 +42,78 @@ def test_lobpcg_vs_scipy(small_graph):
 def test_lobpcg_small_working_set(small_graph):
     """LOBPCG's fast-tier working set is 3 blocks regardless of progress
     (the opposite trade from Krylov–Schur's growing basis)."""
-    n, r, c, v, a = small_graph
-    tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    n, a, tm = _tiles(small_graph)
     res = lobpcg(GraphOperator(tm, impl="ref"), 2, block_size=4,
                  tol=1e-3, max_iters=100, which="LA")
     assert res.m_subspace == 12      # 3·b, constant
+
+
+def test_lobpcg_pass_accounting_byte_exact(small_graph):
+    """Real streamed-pass IOStats, byte-exact against the docstring
+    formulas, on both the fused and unfused pass policies — and identical
+    spectra (same math, same accumulation order)."""
+    n, a, tm = _tiles(small_graph)
+    evs = {}
+    for fused in (True, False):
+        store = TieredStore()
+        op = GraphOperator(tm, impl="ref")
+        res = lobpcg(op, 4, block_size=8,
+                     tol=1e-4, max_iters=300, which="LA", store=store,
+                     fused_passes=fused)
+        assert res.converged and res.n_restarts >= 2
+        # op.n, not the fixture n: pack_tiles pads rows to the tile grid
+        exp_passes, exp_bytes = _lobpcg_expected_io(res.n_restarts, op.n, 8,
+                                                    fused)
+        assert res.io_stats["passes"] == exp_passes
+        assert res.io_stats["pass_bytes_read"] == exp_bytes
+        evs[fused] = np.sort(res.eigenvalues)
+    np.testing.assert_array_equal(evs[True], evs[False])
+
+
+def test_lobpcg_stall_guard_returns_best_iterate(small_graph):
+    """With an unreachable tol the solver must stop at the f32 residual
+    floor and return the best iterate — not iterate to max_iters and hand
+    back a basis poisoned by noise W blocks (under which='LA' the RR
+    garbage otherwise gets SELECTED into X)."""
+    n, a, tm = _tiles(small_graph)
+    res = lobpcg(GraphOperator(tm, impl="ref"), 4, block_size=8,
+                 tol=1e-12, max_iters=120, which="LA", stall_iters=6)
+    assert not res.converged
+    assert res.n_restarts < 120          # stall guard fired
+    w = np.sort(spla.eigsh(a, k=4, which="LA", return_eigenvectors=False))
+    np.testing.assert_allclose(np.sort(res.eigenvalues), w,
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.disk
+def test_lobpcg_safs_byte_exact_and_ram_parity(disk_tmp, small_graph):
+    """The acceptance gate: LOBPCG with [X, W, P] genuinely in SAFS page
+    files converges, reproduces the RAM-path spectrum to rtol 1e-5, and
+    the streamed-pass accounting stays byte-exact (operator tile reads
+    share the store but are excluded by the pass watermark)."""
+    n, a, tm = _tiles(small_graph)
+    evs = {}
+    for backend in ("ram", "safs"):
+        if backend == "ram":
+            store = TieredStore()
+        else:
+            store = TieredStore(
+                device_budget_bytes=2 * n * 4 * 8, backend="safs",
+                backend_opts={"root": os.path.join(disk_tmp, "lobpcg"),
+                              "cache_bytes": 3 * n * 4 * 8})
+        op = GraphOperator(tm, store=store, impl="ref")
+        res = lobpcg(op, 4, block_size=8, tol=1e-4, max_iters=300,
+                     which="LA", store=store)
+        assert res.converged
+        exp_passes, exp_bytes = _lobpcg_expected_io(res.n_restarts, op.n, 8,
+                                                    fused=True)
+        assert res.io_stats["passes"] == exp_passes, backend
+        assert res.io_stats["pass_bytes_read"] == exp_bytes, backend
+        evs[backend] = np.sort(res.eigenvalues)
+        if backend == "safs":
+            assert store.backend.stats.host_bytes_read > 0
+            store.close()
+    np.testing.assert_allclose(evs["safs"], evs["ram"], rtol=1e-5)
 
 
 def test_paged_kv_matches_dense(rng):

@@ -238,11 +238,31 @@ def test_small_reductions_announce_full_pass(monkeypatch):
                                        orig(names))[1])
     for op in (mv.mv_norm, lambda: mv.mv_dot(mv2),
                lambda: mv.clone_view([0, 3]),
-               lambda: mv.mv_add_mv(1.0, mv2, 2.0)):
+               lambda: mv.mv_add_mv(1.0, mv2, 2.0),
+               lambda: mv.mv_scale_diag(jnp.ones(nb * b, jnp.float32))):
         calls.clear()
         op()
         # first announcement covers the whole pass
         assert calls and set(calls[0]) >= set(mv.block_names())
+
+
+def test_mv_scale_diag_single_pass():
+    """MvScale2 through the pass engine: one announced streamed pass, the
+    whole subspace read exactly once, blocks scaled in place (previously a
+    bare get/put loop with no prefetch announcement)."""
+    n, b, nb = 256, 2, 4
+    store = TieredStore()
+    mv = _demoted_mv(store, n, b, nb, seed=10)
+    dense = np.asarray(mv.to_dense())
+    vec = jnp.asarray(np.random.default_rng(10).standard_normal(nb * b),
+                      jnp.float32)
+    store.reset_stats()
+    mv.mv_scale_diag(vec)
+    assert store.stats.passes == 1
+    assert store.stats.pass_bytes_read == n * b * 4 * nb
+    np.testing.assert_allclose(np.asarray(mv.to_dense()),
+                               dense * np.asarray(vec)[None, :],
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_mv_dot_add_mv_still_correct():
