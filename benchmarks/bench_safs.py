@@ -165,7 +165,7 @@ def collect(*, smoke: bool = False) -> dict:
             if pref:
                 store.backend.prefetcher.drain()
             stream[tag] = {"us": (time.perf_counter() - t0) * 1e6}
-            pf = store.backend.prefetcher.stats()
+            pf = store.backend.stats_dict()["prefetch"]
             stream[tag].update(
                 overlap_seconds=pf["overlap_seconds"],
                 busy_seconds=pf["busy_seconds"],
@@ -184,22 +184,21 @@ def collect(*, smoke: bool = False) -> dict:
         mv.compress(q, [b] * (m // 2 // b))
         us = (time.perf_counter() - t0) * 1e6
         store.flush()
-        wb = store.backend.writebehind
+        snap = store.backend.stats_dict()   # cache+prefetch+wb in one call
         out["safs_endurance"] = {
             "us": us,
             "logical_bytes_written": store.stats.host_bytes_written,
-            "physical_bytes_written": store.backend.stats.host_bytes_written,
+            "physical_bytes_written": snap["io"]["host_bytes_written"],
             "disk_over_logical_writes":
-                (store.backend.stats.host_bytes_written
+                (snap["io"]["host_bytes_written"]
                  / max(store.stats.host_bytes_written, 1)),
-            "write_behind": wb.stats_dict() if wb is not None else None,
+            "write_behind": snap["write_behind"],
         }
 
         # endurance store's own lookup mix (compress pass; LRU-dominated —
         # pinning cannot help a pattern that never re-reads its newest
         # block, which is why the pre-fix bench sat at 0.017 here)
-        d = store.backend.stats
-        compress_rate = d.cache_hits / max(d.cache_hits + d.cache_misses, 1)
+        compress_rate = snap["io"]["hit_rate"]
         store.close()
 
         # reorth re-read pattern (§3.4.4): per expansion the newest block
@@ -221,8 +220,7 @@ def collect(*, smoke: bool = False) -> dict:
                 w = w - mv.mv_times_mat(hc)
                 h2 = mv.mv_trans_mv(w)
                 w = w - mv.mv_times_mat(h2)
-            d = store.backend.stats
-            rate = d.cache_hits / max(d.cache_hits + d.cache_misses, 1)
+            rate = store.backend.stats_dict()["io"]["hit_rate"]
             store.close()
             return rate
 

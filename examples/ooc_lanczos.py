@@ -1,7 +1,7 @@
 """End-to-end out-of-core eigensolve with the subspace on disk (SAFS).
 
     PYTHONPATH=src python examples/ooc_lanczos.py [--n 4000] [--nev 8]
-        [--solver ks|lanczos] [--root DIR]
+        [--solver ks|lanczos] [--root DIR] [--trace OUT.jsonl]
 
 This is the full paper pipeline at laptop scale: an RMAT graph, the
 semi-external SpMM operator, and the Krylov–Schur (or block-Lanczos
@@ -22,6 +22,11 @@ approximate), then reports:
   * physical disk traffic (≤ logical: the page cache absorbs re-reads);
   * prefetch overlap seconds (reads hidden behind compute, §3.4.2);
   * a direct-from-pages checkpoint snapshot (no RAM round-trip).
+
+All counters come from one `backend.stats_dict()` snapshot (cache +
+prefetcher + write-behind merged). With `--trace OUT.jsonl` the SAFS solve
+records a full span timeline (`repro.obs`) — inspect it with
+`python -m repro.obs.report OUT.jsonl` or convert to Perfetto JSON.
 """
 import argparse
 import os
@@ -32,19 +37,21 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.graphs import rmat_graph, normalized_adjacency, pack_tiles
-from repro.core import GraphOperator, TieredStore, eigsh, lanczos_eigsh
+from repro.core import GraphOperator, TieredStore, solve
 from repro.ckpt import checkpoint as ck
 
+_METHODS = {"ks": "krylov_schur", "lanczos": "lanczos"}
 
-def solve(image, n, nev, *, solver, store, stream_image=False):
+
+def run_solve(image, n, nev, *, solver, store, stream_image=False,
+              trace=None):
     # stream_image=True spills the edge tiles into the same page store as
     # the subspace: matmat then really is semi-external (§3.3.3)
     op = GraphOperator(image, store=store, impl="ref",
                        stream_image=stream_image, image_chunk_bytes=1 << 20)
-    fn = eigsh if solver == "ks" else lanczos_eigsh
-    kw = ({"tol": 1e-7, "max_restarts": 100} if solver == "ks" else {})
-    return fn(op, nev, block_size=4, store=store, impl="ref",
-              group_size=2, **kw)
+    kw = ({"tol": 1e-7, "max_iters": 100} if solver == "ks" else {})
+    return solve(op, nev, method=_METHODS[solver], block_size=4,
+                 store=store, impl="ref", group_size=2, trace=trace, **kw)
 
 
 def main():
@@ -55,6 +62,8 @@ def main():
     ap.add_argument("--solver", choices=("ks", "lanczos"), default="ks")
     ap.add_argument("--root", default=None,
                     help="directory for the SAFS page files (default: tmp)")
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="record the SAFS solve timeline to this JSONL file")
     args = ap.parse_args()
 
     print(f"building RMAT graph: {args.n} vertices, ~{args.nnz} edges")
@@ -65,7 +74,8 @@ def main():
 
     # in-memory reference: identical solve, ram backend
     ram_store = TieredStore(device_budget_bytes=2 * args.n * 4 * 4)
-    ram = solve(image, args.n, args.nev, solver=args.solver, store=ram_store)
+    ram = run_solve(image, args.n, args.nev, solver=args.solver,
+                    store=ram_store)
 
     root = args.root or tempfile.mkdtemp(prefix="ooc_lanczos_")
     own_tmp = args.root is None
@@ -76,8 +86,8 @@ def main():
         device_budget_bytes=2 * args.n * 4 * 4, backend="safs",
         backend_opts={"root": os.path.join(root, "pages"),
                       "cache_bytes": args.n * 4 * 4 * 3 + (2 << 20)})
-    disk = solve(image, args.n, args.nev, solver=args.solver,
-                 store=safs_store, stream_image=True)
+    disk = run_solve(image, args.n, args.nev, solver=args.solver,
+                     store=safs_store, stream_image=True, trace=args.trace)
 
     w_ram = np.sort(ram.eigenvalues)
     w_disk = np.sort(disk.eigenvalues)
@@ -86,8 +96,8 @@ def main():
     print("safs backend matches ram backend to rtol 1e-5")
 
     s = safs_store.stats
-    d = safs_store.backend.stats
-    pf = safs_store.backend.prefetcher.stats()
+    snap = safs_store.backend.stats_dict()   # cache+prefetch+wb, one call
+    d, pf, w = snap["io"], snap["prefetch"], snap["write_behind"]
     ratio = s.host_bytes_written / max(s.host_bytes_read, 1)
     print(f"logical tier I/O:  read {s.host_bytes_read/1e6:8.1f} MB, "
           f"wrote {s.host_bytes_written/1e6:6.1f} MB "
@@ -95,20 +105,21 @@ def main():
     print(f"streamed subspace passes: {s.passes} "
           f"({s.bytes_per_pass()/1e6:.2f} MB/pass — fused CGS2 reads the "
           f"subspace 2x per expansion, restart compression 1x, §3.4.3)")
-    print(f"physical disk I/O: read {d.host_bytes_read/1e6:8.1f} MB, "
-          f"wrote {d.host_bytes_written/1e6:6.1f} MB "
-          f"(page-cache hits {d.cache_hits}, misses {d.cache_misses})")
+    print(f"physical disk I/O: read {d['host_bytes_read']/1e6:8.1f} MB, "
+          f"wrote {d['host_bytes_written']/1e6:6.1f} MB "
+          f"(page-cache hits {d['cache_hits']}, misses {d['cache_misses']})")
     print(f"readahead: {pf['bytes_prefetched']/1e6:.1f} MB staged by "
           f"{pf['io_workers']} workers (depth {pf['depth']}), "
           f"{pf['overlap_seconds']*1e3:.1f} ms of reads overlapped compute")
-    wb = safs_store.backend.writebehind
-    if wb is not None:
-        w = wb.stats_dict()
+    if w is not None:
         print(f"write-behind: {w['pages_retired']} pages retired in "
               f"{w['batches_retired']} journaled batches "
               f"(peak queue depth {w['max_depth_pages']} pages)")
     assert s.host_bytes_read > 10 * s.host_bytes_written, \
         "tier must be read-dominated (write-avoidance)"
+    if args.trace:
+        print(f"trace: {args.trace} "
+              f"(inspect: python -m repro.obs.report {args.trace})")
 
     # checkpoint straight from the page files (no RAM round-trip)
     ckroot = os.path.join(root, "ckpt")

@@ -84,3 +84,13 @@ print("BENCH_solver_family.json: both methods converged, "
       f"ks-vs-lobpcg rel_err={fam['spectrum_max_rel_err']:.3e}, "
       f"lobpcg safs-vs-ram rel_err={fam['lobpcg_safs_vs_ram_rel_err']:.3e}")
 EOF
+
+# Observability smoke (PR 7): the full out-of-core example with span
+# tracing on, gated on the machine-readable report validator (schema,
+# non-zero span count, non-negative durations, overlap fractions in
+# [0,1], and — on a lossless trace — byte-exact reconciliation of the
+# pass.subspace span bytes against the store's IOStats pass counters).
+echo "== obs trace smoke (ooc_lanczos --trace + repro.obs.report --validate) =="
+TMPDIR="$DISK_TMP" python examples/ooc_lanczos.py --n 2000 --nnz 24000 \
+    --trace "$DISK_TMP/ooc_trace.jsonl"
+python -m repro.obs.report "$DISK_TMP/ooc_trace.jsonl" --validate

@@ -132,7 +132,9 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
         theta_out = theta[:nev].copy()
         res_out = res[:nev].copy()
         if callback is not None:
-            callback(restarts, theta_out, res_out)
+            # fresh copies: theta_out/res_out are returned in EigResult,
+            # so a mutating callback must not be able to corrupt them
+            callback(restarts, theta_out.copy(), res_out.copy())
         if bool(ok[:nev].all()):
             converged = True
             break

@@ -9,6 +9,8 @@ choosing Krylov–Schur (least I/O of the Anasazi solvers).
 """
 from __future__ import annotations
 
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,7 +28,13 @@ def lanczos_eigsh(op, nev: int, *, block_size: int = 4,
                   store: TieredStore | None = None,
                   impl: kops.Impl = "auto", group_size: int = 8,
                   seed: int = 0, compute_eigenvectors: bool = True,
-                  fused_passes: bool = True) -> EigResult:
+                  fused_passes: bool = True,
+                  callback: Callable | None = None) -> EigResult:
+    """`callback(step, theta, res)` fires once per block expansion with the
+    current Ritz values / residual bounds of the growing subspace —
+    nev-length arrays (positions past the subspace dimension padded with
+    0 / inf), freshly allocated per call (mutation-safe). The per-step
+    tridiagonal eigensolve it needs is only paid when a callback is set."""
     b = block_size
     if num_blocks is None:
         num_blocks = 4 * (-(-nev // b)) + 2
@@ -43,6 +51,17 @@ def lanczos_eigsh(op, nev: int, *, block_size: int = 4,
     while v.ncols + b <= m_max:
         q, h, r_next = _expand(op, v, q, h, impl, fused_passes=fused_passes)
         n_ops += 1
+        if callback is not None:
+            th, y = np.linalg.eigh(h)
+            order = sort_ritz(th, which)
+            th, y = th[order], y[:, order]
+            rn = np.linalg.norm(r_next @ y[-b:, :], axis=0)
+            k = min(nev, th.shape[0])
+            theta_cb = np.zeros(nev)
+            res_cb = np.full(nev, np.inf)
+            theta_cb[:k] = th[:k]
+            res_cb[:k] = rn[:k]
+            callback(n_ops - 1, theta_cb, res_cb)
 
     theta, y = np.linalg.eigh(h)
     order = sort_ritz(theta, which)

@@ -40,6 +40,7 @@ import numpy as np
 from repro.graphs.tiles import TiledMatrix
 from repro.core.tiered import HOST, TieredStore
 from repro.kernels import ops as kops
+from repro.obs import trace
 
 
 class LinearOperator(Protocol):
@@ -217,19 +218,24 @@ class GraphOperator:
 
     # ---------------------------------------------------------------- apply
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
-        if self.stream_image:   # reads counted by the store itself
-            return self._matmat_streamed(x)
-        if self.store is not None:  # account the emulated image stream
-            self.store.stats.host_bytes_read += self._image_bytes
-            self.store.stats.host_reads += 1
-        y = kops.spmm_blocks(self._blocks, self._block_cols, self._block_rows,
-                             self._row_mask, x,
-                             n_block_rows=self.tm.n_block_rows, impl=self.impl)
-        rows, cols, vals = self._coo
-        if vals.shape[0]:
-            from repro.kernels.spmm_ref import coo_spmm_ref
-            y = y + coo_spmm_ref(rows, cols, vals, x, self.n)
-        return y
+        with trace.span("operator.matmat", op="GraphOperator",
+                        k=int(x.shape[1]), n=self.n,
+                        streamed=self.stream_image,
+                        bytes=self._image_bytes):
+            if self.stream_image:   # reads counted by the store itself
+                return self._matmat_streamed(x)
+            if self.store is not None:  # account the emulated image stream
+                self.store.stats.host_bytes_read += self._image_bytes
+                self.store.stats.host_reads += 1
+            y = kops.spmm_blocks(self._blocks, self._block_cols,
+                                 self._block_rows, self._row_mask, x,
+                                 n_block_rows=self.tm.n_block_rows,
+                                 impl=self.impl)
+            rows, cols, vals = self._coo
+            if vals.shape[0]:
+                from repro.kernels.spmm_ref import coo_spmm_ref
+                y = y + coo_spmm_ref(rows, cols, vals, x, self.n)
+            return y
 
 
 class NormalOperator:
@@ -277,7 +283,9 @@ class NormalOperator:
         self.at.delete_image()
 
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
-        return self.at.matmat(self.a.matmat(x))
+        with trace.span("operator.matmat", op="NormalOperator",
+                        k=int(x.shape[1]), n=self.n):
+            return self.at.matmat(self.a.matmat(x))
 
 
 class DenseOperator:
@@ -288,7 +296,9 @@ class DenseOperator:
         self.n = a.shape[0]
 
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
-        return self.a @ x
+        with trace.span("operator.matmat", op="DenseOperator",
+                        k=int(x.shape[1]), n=self.n):
+            return self.a @ x
 
 
 class HvpOperator:
@@ -315,11 +325,13 @@ class HvpOperator:
         self._hvp = jax.jit(jax.vmap(hvp_single, in_axes=1, out_axes=1))
 
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
-        v = x[:self.n_logical, :]
-        hv = self._hvp(v)
-        if self.n == self.n_logical:
-            return hv
-        return jnp.pad(hv, ((0, self.n - self.n_logical), (0, 0)))
+        with trace.span("operator.matmat", op="HvpOperator",
+                        k=int(x.shape[1]), n=self.n):
+            v = x[:self.n_logical, :]
+            hv = self._hvp(v)
+            if self.n == self.n_logical:
+                return hv
+            return jnp.pad(hv, ((0, self.n - self.n_logical), (0, 0)))
 
 
 # ---------------------------------------------------------------- transforms
@@ -382,16 +394,20 @@ class ShiftInvertOperator:
         return self.inner.matmat(x) - self.sigma * x
 
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
-        x = jnp.asarray(x, jnp.float32)
-        if self.inner_solver == "cg":
-            apply_fn, rhs = self._shifted, x
-        else:                                   # CGNR: (A−σ)² y = (A−σ) x
-            apply_fn = lambda v: self._shifted(self._shifted(v))  # noqa: E731
-            rhs = self._shifted(x)
-        y, iters = _block_cg(apply_fn, rhs, tol=self.cg_tol,
-                             maxiter=self.cg_maxiter)
-        self.n_inner_iters += iters
-        return y
+        with trace.span("operator.matmat", op="ShiftInvertOperator",
+                        k=int(x.shape[1]), n=self.n,
+                        inner=self.inner_solver) as sp:
+            x = jnp.asarray(x, jnp.float32)
+            if self.inner_solver == "cg":
+                apply_fn, rhs = self._shifted, x
+            else:                               # CGNR: (A−σ)² y = (A−σ) x
+                apply_fn = lambda v: self._shifted(self._shifted(v))  # noqa: E731,E501
+                rhs = self._shifted(x)
+            y, iters = _block_cg(apply_fn, rhs, tol=self.cg_tol,
+                                 maxiter=self.cg_maxiter)
+            self.n_inner_iters += iters
+            sp.set(inner_iters=iters)
+            return y
 
     def untransform(self, theta, vecs=None) -> np.ndarray:
         if vecs is not None:
@@ -465,11 +481,13 @@ class ChebyshevFilterOperator:
         return (self.inner.matmat(x) - c * x) / e
 
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
-        t_prev = jnp.asarray(x, jnp.float32)
-        t_cur = self._mapped(t_prev)
-        for _ in range(self.degree - 1):
-            t_prev, t_cur = t_cur, 2.0 * self._mapped(t_cur) - t_prev
-        return t_cur
+        with trace.span("operator.matmat", op="ChebyshevFilterOperator",
+                        k=int(x.shape[1]), n=self.n, degree=self.degree):
+            t_prev = jnp.asarray(x, jnp.float32)
+            t_cur = self._mapped(t_prev)
+            for _ in range(self.degree - 1):
+                t_prev, t_cur = t_cur, 2.0 * self._mapped(t_cur) - t_prev
+            return t_cur
 
     def untransform(self, theta, vecs=None) -> np.ndarray:
         if vecs is None:

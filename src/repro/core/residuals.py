@@ -45,6 +45,7 @@ class EigResult:
     m_subspace: int
     converged: bool
     io_stats: dict | None = None
+    trace: object | None = None    # obs.Tracer when solve(..., trace=) was used
 
 
 def true_residuals(op, x: jnp.ndarray, theta: Sequence[float]) -> np.ndarray:

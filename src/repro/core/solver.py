@@ -38,11 +38,15 @@ so the returned `EigResult` always describes eigenpairs of A itself.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Protocol
+import os
+from typing import Callable, Dict, Optional, Protocol, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.progress import ConvergenceTracker
 from repro.core.krylov_schur import eigsh
 from repro.core.lanczos import lanczos_eigsh
 from repro.core.lobpcg import lobpcg
@@ -114,7 +118,7 @@ class _Lanczos:
             store=ctx.store, impl=ctx.impl, seed=ctx.seed,
             group_size=ctx.options.get("group_size", 8),
             compute_eigenvectors=ctx.compute_eigenvectors,
-            fused_passes=ctx.fused_passes)
+            fused_passes=ctx.fused_passes, callback=ctx.callback)
 
 
 class _Lobpcg:
@@ -146,7 +150,8 @@ class _Svd:
         r = svds(ctx.op, at_op, ctx.nev, block_size=ctx.block_size or 2,
                  num_blocks=ctx.options.get("num_blocks"), tol=ctx.tol,
                  max_restarts=ctx.max_iters, store=ctx.store, impl=ctx.impl,
-                 seed=ctx.seed, compute_vectors=ctx.compute_eigenvectors)
+                 seed=ctx.seed, compute_vectors=ctx.compute_eigenvectors,
+                 callback=ctx.callback)
         return EigResult(
             eigenvalues=r.s, eigenvectors=r.u,
             residuals=np.zeros_like(r.s), n_restarts=r.n_restarts,
@@ -196,7 +201,9 @@ def solve(op, nev: int, *, method: str = "krylov_schur",
           store: TieredStore | None = None, ortho: str = "fused",
           impl: kops.Impl = "auto", seed: int = 0,
           compute_eigenvectors: bool = True,
-          callback: Callable | None = None, **options) -> EigResult:
+          callback: Callable | None = None,
+          trace: Union[obs_trace.Tracer, str, os.PathLike, None] = None,
+          **options) -> EigResult:
     """Solve for `nev` eigenpairs of `op` with the chosen family member.
 
     method: one of `solver_names()` — "krylov_schur" (the paper's driver),
@@ -215,6 +222,18 @@ def solve(op, nev: int, *, method: str = "krylov_schur",
     returns the `nev` eigenvalues of A nearest sigma, ordered by
     proximity, with true A-residuals.
 
+    trace: pass an `obs.Tracer` (or a path — a fresh Tracer is created and
+    its JSONL timeline written there on completion) to record the whole
+    solve: a root "solve" span, every instrumented substrate span
+    (operator applies, streamed passes, SAFS fill/evict/retire/
+    prefetch-wait), per-step "convergence.step" events with an ETA
+    estimate, and a "solve.io" metrics record with before/after/delta
+    I/O-counter snapshots. The solver implementations are untouched —
+    everything rides the module-level tracer + the `callback` seam. The
+    Tracer is attached to the result as `EigResult.trace`; feed its JSONL
+    to `python -m repro.obs.report` for the human/CI report or
+    `write_chrome()` for Perfetto.
+
     All remaining keyword arguments land in `SolverContext.options`
     (num_blocks, group_size, precond, at_op, ...).
     """
@@ -231,12 +250,42 @@ def solve(op, nev: int, *, method: str = "krylov_schur",
         # (shift-invert near a dominant σ-neighborhood, Chebyshev filters
         # are ≥ 1 on the wanted set) — take the algebraic top.
         which = "LA"
+
+    trace_path = None
+    tracer = None
+    if trace is not None:
+        if isinstance(trace, obs_trace.Tracer):
+            tracer = trace
+        else:
+            trace_path = os.fspath(trace)
+            tracer = obs_trace.Tracer()
+
     ctx = SolverContext(
         op=op, nev=nev, which=which, tol=tol, max_iters=max_iters,
         store=store or TieredStore(), block_size=block_size, ortho=ortho,
         impl=impl, seed=seed, compute_eigenvectors=compute_eigenvectors,
         callback=callback, options=options)
-    res = solver.solve(ctx)
-    if is_transform:
-        res = _untransform(op, res)
-    return res
+
+    if tracer is None:
+        res = solver.solve(ctx)
+        if is_transform:
+            res = _untransform(op, res)
+        return res
+
+    conv = ConvergenceTracker(tracer, tol=tol, nev=nev, method=method)
+    ctx.callback = conv.chain(callback)
+    with obs_trace.tracing(tracer):
+        with obs_trace.span("solve", method=method, nev=nev, which=which,
+                            tol=tol) as sp:
+            s0 = obs_metrics.snapshot_store(ctx.store)
+            res = solver.solve(ctx)
+            if is_transform:
+                res = _untransform(op, res)
+            s1 = obs_metrics.snapshot_store(ctx.store)
+            sp.set(converged=res.converged, restarts=res.n_restarts,
+                   n_ops=res.n_ops)
+        tracer.metric("solve.io", {"start": s0, "end": s1,
+                                   "delta": obs_metrics.delta(s0, s1)})
+    if trace_path is not None:
+        tracer.write_jsonl(trace_path)
+    return dataclasses.replace(res, trace=tracer)

@@ -36,6 +36,7 @@ from typing import Callable, List, Optional, Sequence
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.obs import trace
 
 
 class Handle:
@@ -276,23 +277,31 @@ class SubspacePass:
         mv = self.mv
         names = self._names()
         read0 = self.store.begin_pass()
-        if names:
-            self.store.prefetch(names)      # whole pass announced up front
-        pos = 0
-        for i in self.block_ids:
-            if self.readahead:
-                # re-offer the window: ids past the backend's readahead
-                # depth were dropped at announce time and re-queue here
-                self.store.prefetch(names[pos + 1:pos + 1 + self.readahead])
-            block = self._materialize(mv, i)
-            pos += 1
-            pblocks = []
-            for p in self.peers:
-                pblocks.append(self._materialize(p, i))
+        # the span's `bytes` attribute is the same host_bytes_read delta
+        # end_pass attributes to pass_bytes_read — the report reconciles
+        # the two accountants byte-exactly
+        with trace.span("pass.subspace", blocks=len(self.block_ids),
+                        consumers=len(self._consumers),
+                        peers=len(self.peers)) as sp:
+            if names:
+                self.store.prefetch(names)  # whole pass announced up front
+            pos = 0
+            for i in self.block_ids:
+                if self.readahead:
+                    # re-offer the window: ids past the backend's readahead
+                    # depth were dropped at announce time and re-queue here
+                    self.store.prefetch(
+                        names[pos + 1:pos + 1 + self.readahead])
+                block = self._materialize(mv, i)
                 pos += 1
-            for c in self._consumers:
-                c.visit(i, block, pblocks)
-        self.store.end_pass(read0)
+                pblocks = []
+                for p in self.peers:
+                    pblocks.append(self._materialize(p, i))
+                    pos += 1
+                for c in self._consumers:
+                    c.visit(i, block, pblocks)
+            self.store.end_pass(read0)
+            sp.set(bytes=self.store.stats.host_bytes_read - read0)
         for c in self._consumers:
             c.handle._set(c.finalize())
 

@@ -9,6 +9,7 @@ vectors as U = A V Σ⁻¹.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,17 +35,28 @@ def svds(a_op: GraphOperator, at_op: GraphOperator, nsv: int, *,
          block_size: int = 2, num_blocks: int | None = None,
          tol: float = 1e-8, max_restarts: int = 60,
          store: TieredStore | None = None, impl: kops.Impl = "auto",
-         seed: int = 0, compute_vectors: bool = True) -> SvdResult:
+         seed: int = 0, compute_vectors: bool = True,
+         callback: Callable | None = None) -> SvdResult:
     """Leading nsv singular triplets of A (n_rows × n_cols).
 
     The paper uses block size 2 and NB = 2·nsv for the page graph because
     SpMM is SSD-bound there — the same defaults apply here.
+
+    `callback(restart, sigma, res)` fires per inner restart with the
+    current σ estimates (σ = √max(θ, 0) — translated from the Gram
+    operator's eigenvalue space) and the Gram residual bounds; arrays are
+    fresh copies per call (mutation-safe).
     """
     store = store or TieredStore()
     gram_op = NormalOperator(a_op, at_op)
+    cb = None
+    if callback is not None:
+        def cb(k, theta, res):
+            callback(k, np.sqrt(np.maximum(theta, 0.0)), res.copy())
     res = eigsh(gram_op, nsv, block_size=block_size, num_blocks=num_blocks,
                 tol=tol, max_restarts=max_restarts, which="LA", store=store,
-                impl=impl, seed=seed, compute_eigenvectors=compute_vectors)
+                impl=impl, seed=seed, compute_eigenvectors=compute_vectors,
+                callback=cb)
     lam = np.maximum(res.eigenvalues, 0.0)
     s = np.sqrt(lam)
     u = v = None

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
+
 DEVICE = "device"
 HOST = "host"  # the "SSD" tier
 
@@ -71,9 +73,18 @@ class IOStats:
         reads sharing the store do not dilute the figure."""
         return self.pass_bytes_read / max(self.passes, 1)
 
-    def as_dict(self) -> Dict[str, int]:
+    def hit_rate(self) -> float:
+        """Fraction of lookups served without a slow-tier read. Every
+        stats surface (logical tier, page cache, merged backend snapshot)
+        reports this identically via `as_dict`."""
+        return self.cache_hits / max(self.cache_hits + self.cache_misses, 1)
+
+    def as_dict(self) -> Dict[str, float]:
+        # Dict[str, float]: the raw fields are ints, but the derived
+        # bytes_per_pass / hit_rate gauges are ratios
         d = dataclasses.asdict(self)
         d["bytes_per_pass"] = self.bytes_per_pass()
+        d["hit_rate"] = self.hit_rate()
         return d
 
 
@@ -181,7 +192,10 @@ class TieredStore:
         self.stats.cache_misses += 1
         self.stats.host_bytes_read += e.nbytes
         self.stats.host_reads += 1
-        return jnp.asarray(self.backend.load(e.data_id))
+        # span on the slow-tier branch only: device hits are free and
+        # would dominate the trace with noise
+        with trace.span("store.get", block=name, bytes=e.nbytes):
+            return jnp.asarray(self.backend.load(e.data_id))
 
     def promote(self, name: str) -> jnp.ndarray:
         """Move to device tier (counted read if it was on host)."""
@@ -200,7 +214,8 @@ class TieredStore:
         if e.tier == HOST:
             return
         if e.dirty or not e.has_host:
-            self.backend.store(e.data_id, np.asarray(e.device_val))
+            with trace.span("store.demote", block=name, bytes=e.nbytes):
+                self.backend.store(e.data_id, np.asarray(e.device_val))
             e.has_host = True
             self.stats.host_bytes_written += e.nbytes
             self.stats.host_writes += 1
@@ -273,6 +288,7 @@ class TieredStore:
         ids = [self._entries[n].data_id for n in names
                if n in self._entries and self._entries[n].tier == HOST]
         if ids:
+            trace.event("store.prefetch", n=len(ids), first=ids[0])
             self.backend.prefetch(ids)
 
     def stream(self, names: Iterable[str], *, readahead: int = 2):

@@ -51,6 +51,7 @@ from repro.dist.dspmm import (CHUNK, _groups, build_dspmm, build_eigen_step,
                               build_eigen_step_compressed, edge_spec,
                               pack_compressed_panels, pack_edge_panels,
                               vector_spec)
+from repro.obs import trace
 
 
 def default_mesh(devices=None) -> jax.sharding.Mesh:
@@ -125,6 +126,10 @@ class DistOperator:
         # the compressed mode exists to save
         self._vstack: Optional[jnp.ndarray] = None
         self.n_fused_steps = 0
+        # per-compiled-program collective wire bytes (trace attribution;
+        # computed lazily and only while tracing — lowering costs a
+        # compile)
+        self._coll_bytes: Dict[tuple, Optional[dict]] = {}
 
     # ------------------------------------------------------- vertex maps
     def nat_to_pad(self, x: np.ndarray) -> np.ndarray:
@@ -137,6 +142,24 @@ class DistOperator:
         """Gather natural-vertex rows out of a padded position vector."""
         return np.asarray(x)[self.perm[:self.n_logical]]
 
+    # -------------------------------------------------- trace attribution
+    def _collectives(self, key: tuple, fn, args) -> Optional[dict]:
+        """Per-device collective wire bytes of one compiled program
+        (`utils.hlo_analysis.collective_bytes` over the optimized HLO),
+        cached per (kind, nb_v, b) key. Only consulted while tracing; any
+        lowering/compile failure degrades to None, never to a solve
+        error."""
+        if key in self._coll_bytes:
+            return self._coll_bytes[key]
+        try:
+            from repro.utils.hlo_analysis import collective_bytes
+            txt = fn.lower(*args).compile().as_text()
+            out = collective_bytes(txt, int(self.mesh.devices.size))
+        except Exception:
+            out = None
+        self._coll_bytes[key] = out
+        return out
+
     # ----------------------------------------------------------- matmat
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
         b = int(x.shape[1])
@@ -144,8 +167,15 @@ class DistOperator:
         if fn is None:
             fn = self._spmm[b] = build_dspmm(self.mesh, n_pad=self.n,
                                              e_loc=self.e_loc, b=b)
-        return fn(self._pc, self._pr, self._pv,
-                  jnp.asarray(x, jnp.float32))
+        with trace.span("operator.matmat", op="DistOperator", k=b,
+                        n=self.n) as sp:
+            args = (self._pc, self._pr, self._pv,
+                    jnp.asarray(x, jnp.float32))
+            if trace.active() is not None:
+                coll = self._collectives(("spmm", b), fn, args)
+                if coll is not None:
+                    sp.set(collective_bytes=coll.get("total", 0.0))
+            return fn(*args)
 
     # ------------------------------------------------------- fused step
     def _step(self, nb_v: int, b: int):
@@ -190,14 +220,22 @@ class DistOperator:
         to v by the caller). Returns (q_next, h_col, r_next) with the exact
         invariant A·q = V·h_col + q_next·r_next, V including q."""
         b = int(q.shape[1])
-        self._sync_vstack(v, q)
-        nb_v = self._vstack.shape[0]
-        step = self._step(nb_v, b)
-        panels = ((self._packed, self._bases, self._vbf16)
-                  if self.compressed else (self._pc, self._pr, self._pv))
-        q_next, h, r = step(*panels, self._vstack, self._vstack[-1])
-        self.n_fused_steps += 1
-        return q_next, h, r
+        with trace.span("operator.fused_expand", op="DistOperator",
+                        k=b) as sp:
+            self._sync_vstack(v, q)
+            nb_v = self._vstack.shape[0]
+            step = self._step(nb_v, b)
+            panels = ((self._packed, self._bases, self._vbf16)
+                      if self.compressed else (self._pc, self._pr, self._pv))
+            args = panels + (self._vstack, self._vstack[-1])
+            sp.set(nb_v=nb_v)
+            if trace.active() is not None:
+                coll = self._collectives(("step", nb_v, b), step, args)
+                if coll is not None:
+                    sp.set(collective_bytes=coll.get("total", 0.0))
+            q_next, h, r = step(*args)
+            self.n_fused_steps += 1
+            return q_next, h, r
 
     def reset_subspace(self) -> None:
         """Drop the mirrored device shards (before reusing the operator

@@ -32,6 +32,7 @@ from typing import Dict, Iterable, Optional, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.tiered import IOStats
+from repro.obs import trace
 from repro.safs.cache import PageCache, WriteBehind
 from repro.safs.pagefile import PAGE_SIZE, PageFile
 from repro.safs.prefetch import PrefetchError, Prefetcher
@@ -52,6 +53,7 @@ class StorageBackend(Protocol):
     def prefetch(self, data_ids: Iterable[str]) -> None: ...
     def flush(self) -> None: ...
     def close(self) -> None: ...
+    def stats_dict(self) -> dict: ...
 
 
 # ---------------------------------------------------------------- ram
@@ -94,6 +96,12 @@ class RamBackend:
 
     def close(self) -> None:
         self._bufs.clear()
+
+    def stats_dict(self) -> dict:
+        """Merged snapshot, same shape as SafsBackend's (absent subsystems
+        report None so consumers need no backend-type dispatch)."""
+        return {"io": self.stats.as_dict(), "cache": None, "prefetch": None,
+                "write_behind": None}
 
 
 # ---------------------------------------------------------------- safs
@@ -193,6 +201,12 @@ class SafsBackend:
         """Batched cache fill: every non-resident page of data_id, read as
         coalesced vectored runs (one preadv per run). Runs on the
         readahead workers; pread keeps it safe vs the consumer."""
+        with trace.span("safs.fill", file=data_id) as sp:
+            n = self._fill_inner(data_id)
+            sp.set(bytes=n)
+            return n
+
+    def _fill_inner(self, data_id: str) -> int:
         with self._lock:
             pf = self._files.get(data_id)
         if pf is None:
@@ -383,6 +397,28 @@ class SafsBackend:
         for pf in files:
             pf.sync()
         return n
+
+    def stats_dict(self) -> dict:
+        """One merged snapshot of every SAFS counter surface: physical
+        disk traffic (`io` — the shared cache IOStats), cache residency,
+        prefetcher overlap accounting, write-behind queue state. This is
+        the supported external surface — benchmarks/examples read this
+        instead of poking `backend.writebehind`/`backend.prefetcher`
+        internals (which may be absent on other backends)."""
+        with self._lock:
+            n_files = len(self._files)
+        return {
+            "io": self.stats.as_dict(),
+            "cache": {"capacity_bytes": self.cache.capacity,
+                      "page_size": self.page_size,
+                      "resident_pages": self.cache.n_pages(),
+                      "resident_bytes": self.cache.nbytes(),
+                      "pinned_files": len(self.cache.pinned()),
+                      "n_files": n_files},
+            "prefetch": self.prefetcher.stats(),
+            "write_behind": (self.writebehind.stats_dict()
+                             if self.writebehind is not None else None),
+        }
 
     def close(self) -> None:
         try:

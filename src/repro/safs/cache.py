@@ -35,6 +35,7 @@ from collections import OrderedDict
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.tiered import IOStats
+from repro.obs import trace
 
 Key = Tuple[str, int]
 
@@ -92,17 +93,23 @@ class PageCache:
                 break
             if key[0] not in self._pinned:
                 victims.append(key)
-        by_file: Dict[str, Dict[int, bytes]] = {}
-        for key in victims:
-            line = self._lines.pop(key)
-            self._dec_per_file(key[0])
-            if line.dirty:
-                by_file.setdefault(key[0], {})[key[1]] = line.data
-        for d, pages in by_file.items():
-            n = self._writer(d, pages)
-            if n:      # an async (write-behind) sink returns 0 at submit
-                self.stats.host_bytes_written += n
-                self.stats.host_writes += 1
+        if not victims:
+            return
+        with trace.span("safs.evict", pages=len(victims)) as sp:
+            by_file: Dict[str, Dict[int, bytes]] = {}
+            dirty = 0
+            for key in victims:
+                line = self._lines.pop(key)
+                self._dec_per_file(key[0])
+                if line.dirty:
+                    dirty += 1
+                    by_file.setdefault(key[0], {})[key[1]] = line.data
+            sp.set(dirty_pages=dirty)
+            for d, pages in by_file.items():
+                n = self._writer(d, pages)
+                if n:   # an async (write-behind) sink returns 0 at submit
+                    self.stats.host_bytes_written += n
+                    self.stats.host_writes += 1
 
     # ------------------------------------------------------------ lookups
     def get(self, data_id: str, page: int, *, with_dirty: bool = False):
@@ -311,7 +318,10 @@ class WriteBehind:
             err: Optional[BaseException] = None
             written = 0
             try:
-                written = self._writer(data_id, pages)
+                with trace.span("safs.wb.retire", file=data_id,
+                                pages=len(pages)) as sp:
+                    written = self._writer(data_id, pages)
+                    sp.set(bytes=written)
             except BaseException as e:
                 err = e
             with self._cv:

@@ -36,6 +36,8 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, Optional
 
+from repro.obs import trace
+
 
 class PrefetchError(RuntimeError):
     """A background reader failed; re-raised at the consumer's wait()."""
@@ -135,19 +137,23 @@ class Prefetcher:
             ev = self._done.get(data_id)
         if ev is None:
             return 0.0
-        t0 = time.perf_counter()
-        while not ev.wait(poll):
-            if not any(t.is_alive() for t in self._threads):
-                with self._lock:
-                    self.wait_seconds += time.perf_counter() - t0
-                    self._done.pop(data_id, None)
-                raise PrefetchError(
-                    f"prefetch workers died with {data_id!r} unfinished")
-        dt = time.perf_counter() - t0
-        with self._lock:
-            self.wait_seconds += dt
-            self._done.pop(data_id, None)
-            err = self._errors.pop(data_id, None)
+        # span only when a prefetch was actually in flight: its duration
+        # is the *un*-overlapped disk time the consumer pays (§3.4.2)
+        with trace.span("safs.prefetch_wait", file=data_id) as sp:
+            t0 = time.perf_counter()
+            while not ev.wait(poll):
+                if not any(t.is_alive() for t in self._threads):
+                    with self._lock:
+                        self.wait_seconds += time.perf_counter() - t0
+                        self._done.pop(data_id, None)
+                    raise PrefetchError(
+                        f"prefetch workers died with {data_id!r} unfinished")
+            dt = time.perf_counter() - t0
+            sp.set(seconds=dt)
+            with self._lock:
+                self.wait_seconds += dt
+                self._done.pop(data_id, None)
+                err = self._errors.pop(data_id, None)
         if err is not None:
             raise PrefetchError(f"prefetch of {data_id!r} failed") from err
         return dt
