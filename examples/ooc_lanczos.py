@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/ooc_lanczos.py [--n 4000] [--nev 8]
         [--solver ks|lanczos] [--root DIR] [--trace OUT.jsonl]
+        [--checkpoint DIR [--every N]] [--resume DIR]
 
 This is the full paper pipeline at laptop scale: an RMAT graph, the
 semi-external SpMM operator, and the Krylov–Schur (or block-Lanczos
@@ -27,10 +28,20 @@ All counters come from one `backend.stats_dict()` snapshot (cache +
 prefetcher + write-behind merged). With `--trace OUT.jsonl` the SAFS solve
 records a full span timeline (`repro.obs`) — inspect it with
 `python -m repro.obs.report OUT.jsonl` or convert to Perfetto JSON.
+
+Fault tolerance (`--solver ks` only): `--checkpoint DIR` snapshots the
+SAFS solve at restart boundaries (every `--every` restarts) under
+`ft.PreemptionGuard` — a SIGTERM mid-solve finishes the in-flight
+restart, commits a checkpoint and exits 0 with a resume hint; rerun with
+`--resume DIR` to continue from the newest committed snapshot (the final
+ram-parity assert then proves the interrupted solve converged to the
+same spectrum).
 """
 import argparse
 import os
 import shutil
+import signal
+import sys
 import tempfile
 
 import numpy as np
@@ -39,19 +50,23 @@ import jax.numpy as jnp
 from repro.graphs import rmat_graph, normalized_adjacency, pack_tiles
 from repro.core import GraphOperator, TieredStore, solve
 from repro.ckpt import checkpoint as ck
+from repro.ckpt.solver import CheckpointPolicy, SolveSuspended
+from repro.ft import PreemptionGuard
 
 _METHODS = {"ks": "krylov_schur", "lanczos": "lanczos"}
 
 
 def run_solve(image, n, nev, *, solver, store, stream_image=False,
-              trace=None):
+              trace=None, checkpoint=None, resume=None, callback=None):
     # stream_image=True spills the edge tiles into the same page store as
     # the subspace: matmat then really is semi-external (§3.3.3)
     op = GraphOperator(image, store=store, impl="ref",
                        stream_image=stream_image, image_chunk_bytes=1 << 20)
     kw = ({"tol": 1e-7, "max_iters": 100} if solver == "ks" else {})
     return solve(op, nev, method=_METHODS[solver], block_size=4,
-                 store=store, impl="ref", group_size=2, trace=trace, **kw)
+                 store=store, impl="ref", group_size=2, trace=trace,
+                 checkpoint=checkpoint, resume=resume, callback=callback,
+                 **kw)
 
 
 def main():
@@ -64,7 +79,20 @@ def main():
                     help="directory for the SAFS page files (default: tmp)")
     ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
                     help="record the SAFS solve timeline to this JSONL file")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="snapshot the SAFS solve at restart boundaries "
+                         "into DIR; SIGTERM suspends resumably (ks only)")
+    ap.add_argument("--every", type=int, default=1,
+                    help="checkpoint cadence in restarts (default 1)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="continue the SAFS solve from the newest "
+                         "committed checkpoint under DIR")
+    ap.add_argument("--preempt-after", type=int, default=None,
+                    help=argparse.SUPPRESS)  # test hook: SIGTERM ourselves
+                    # after N restarts to exercise the real signal path
     args = ap.parse_args()
+    if (args.checkpoint or args.resume) and args.solver != "ks":
+        ap.error("--checkpoint/--resume need --solver ks")
 
     print(f"building RMAT graph: {args.n} vertices, ~{args.nnz} edges")
     r, c, v = rmat_graph(args.n, args.nnz, seed=1, symmetric=True)
@@ -86,8 +114,34 @@ def main():
         device_budget_bytes=2 * args.n * 4 * 4, backend="safs",
         backend_opts={"root": os.path.join(root, "pages"),
                       "cache_bytes": args.n * 4 * 4 * 3 + (2 << 20)})
-    disk = run_solve(image, args.n, args.nev, solver=args.solver,
-                     store=safs_store, stream_image=True, trace=args.trace)
+
+    callback = None
+    if args.preempt_after is not None:
+        def callback(step, _theta, _res, _n=[0]):
+            _n[0] += 1
+            if _n[0] == args.preempt_after:
+                os.kill(os.getpid(), signal.SIGTERM)
+
+    with PreemptionGuard() as guard:
+        policy = None
+        if args.checkpoint:
+            policy = CheckpointPolicy(root=args.checkpoint,
+                                      every_restarts=args.every,
+                                      guard=guard)
+        try:
+            disk = run_solve(image, args.n, args.nev, solver=args.solver,
+                             store=safs_store, stream_image=True,
+                             trace=args.trace, checkpoint=policy,
+                             resume=args.resume, callback=callback)
+        except SolveSuspended as e:
+            # preempted: the in-flight restart finished and committed —
+            # exit clean, the next run continues where this one stopped
+            print(f"solve suspended at restart {e.step}; resume with "
+                  f"--resume {e.root}")
+            safs_store.close()
+            if own_tmp:
+                shutil.rmtree(root, ignore_errors=True)
+            sys.exit(0)
 
     w_ram = np.sort(ram.eigenvalues)
     w_disk = np.sort(disk.eigenvalues)

@@ -94,3 +94,18 @@ echo "== obs trace smoke (ooc_lanczos --trace + repro.obs.report --validate) =="
 TMPDIR="$DISK_TMP" python examples/ooc_lanczos.py --n 2000 --nnz 24000 \
     --trace "$DISK_TMP/ooc_trace.jsonl"
 python -m repro.obs.report "$DISK_TMP/ooc_trace.jsonl" --validate
+
+# Fault-tolerance smoke (PR 8): kill the out-of-core solve mid-flight
+# through the real SIGTERM path (PreemptionGuard → boundary checkpoint →
+# SolveSuspended → exit 0 with a resume hint), then resume from the
+# committed checkpoint into a fresh SAFS root. The resume run's built-in
+# ram-parity assert (rtol 1e-5) is the gate that the interrupted solve
+# converged to the same spectrum.
+echo "== fault-tolerance smoke (suspend via SIGTERM → resume, parity) =="
+FT_CK="$DISK_TMP/ft_smoke_ck"
+FT_OUT="$(TMPDIR="$DISK_TMP" python examples/ooc_lanczos.py --n 2000 \
+    --nnz 24000 --checkpoint "$FT_CK" --preempt-after 2)"
+echo "$FT_OUT"
+grep -q "solve suspended at restart" <<<"$FT_OUT"
+TMPDIR="$DISK_TMP" python examples/ooc_lanczos.py --n 2000 --nnz 24000 \
+    --resume "$FT_CK"

@@ -20,6 +20,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any
 
 import jax
@@ -72,14 +73,44 @@ def save(root: str, step: int, tree: Any, *, extra: dict | None = None) -> str:
     return final
 
 
-def latest_step(root: str) -> int | None:
+def valid_steps(root: str) -> list[int]:
+    """All committed checkpoint steps under root, ascending. A step is
+    committed iff its final dir exists with a manifest; `.tmp` dirs (a
+    crash mid-save) are never valid."""
     if not os.path.isdir(root):
-        return None
+        return []
     steps = []
     for d in os.listdir(root):
         if d.startswith("step_") and not d.endswith(".tmp"):
             if os.path.exists(os.path.join(root, d, MANIFEST)):
                 steps.append(int(d.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(root: str, *, gc_stale_tmp: bool = True,
+                tmp_grace_seconds: float = 3600.0) -> int | None:
+    """Newest committed checkpoint step (None if no valid checkpoint).
+
+    `step_*.tmp` dirs are a crash mid-`save` — never valid, and left
+    behind forever by a killed writer. The restart path is the natural
+    place to reclaim them: any tmp older than `tmp_grace_seconds` is
+    removed (the grace keeps a *live* writer's in-flight tmp safe — e.g.
+    an AsyncWriter in another process of an elastic restart)."""
+    if not os.path.isdir(root):
+        return None
+    if gc_stale_tmp:
+        now = time.time()
+        for d in os.listdir(root):
+            if not (d.startswith("step_") and d.endswith(".tmp")):
+                continue
+            p = os.path.join(root, d)
+            try:
+                age = now - os.path.getmtime(p)
+            except OSError:
+                continue        # raced with its writer's rename/cleanup
+            if age >= tmp_grace_seconds:
+                shutil.rmtree(p, ignore_errors=True)
+    steps = valid_steps(root)
     return max(steps) if steps else None
 
 

@@ -75,7 +75,8 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
           store: TieredStore | None = None, impl: kops.Impl = "auto",
           group_size: int = 8, seed: int = 0,
           compute_eigenvectors: bool = True, fused_passes: bool = True,
-          callback: Callable | None = None) -> EigResult:
+          callback: Callable | None = None,
+          checkpointer=None) -> EigResult:
     """Compute `nev` eigenpairs of a symmetric LinearOperator.
 
     Defaults follow the paper's parameter study (§4.3): block size b,
@@ -90,6 +91,14 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
     zation in 2 subspace reads per expansion instead of 4, restart
     compression in exactly 1 read regardless of k_keep. fused_passes=
     False keeps the unfused reference path (parity tests, I/O benches).
+
+    checkpointer: a `ckpt.solver.SolveCheckpointer` (normally built by
+    `core.solver.solve(..., checkpoint=/resume=)`). Snapshots land at
+    restart boundaries — right after thick-restart compression, when the
+    live state is exactly the compressed subspace plus H = diag(θ), q and
+    r_next (the paper's §3.4 observation: restart compression IS the
+    checkpoint compression). Resume restores that state bit-identically
+    and continues at the next restart index.
     """
     b = block_size
     if num_blocks is None:
@@ -101,19 +110,34 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
 
     store = store or TieredStore()
     n = op.n
-    key = jax.random.PRNGKey(seed)
-    q, _ = cholqr(jax.random.normal(key, (n, b), jnp.float32), impl=impl)
 
-    v = MultiVector(store, n, group_size=group_size, impl=impl)
-    h = np.zeros((0, 0), dtype=np.float64)
-    r_next = np.zeros((b, b), dtype=np.float64)
-    n_ops = 0
+    resume = checkpointer.load(store) if checkpointer is not None else None
+    if resume is not None:
+        # bit-identical continuation from the last committed restart
+        # boundary: same subspace blocks, same H/q/r_next, same counters
+        v = resume.mvs["v"]
+        h = np.asarray(resume.arrays["h"], np.float64)
+        q = jnp.asarray(resume.arrays["q"], jnp.float32)
+        r_next = np.asarray(resume.arrays["r_next"], np.float64)
+        theta_out = np.asarray(resume.arrays["theta_out"], np.float64)
+        res_out = np.asarray(resume.arrays["res_out"], np.float64)
+        n_ops = int(resume.extra["n_ops"])
+        start_restart = resume.step
+    else:
+        key = jax.random.PRNGKey(seed)
+        q, _ = cholqr(jax.random.normal(key, (n, b), jnp.float32),
+                      impl=impl)
+        v = MultiVector(store, n, group_size=group_size, impl=impl)
+        h = np.zeros((0, 0), dtype=np.float64)
+        r_next = np.zeros((b, b), dtype=np.float64)
+        n_ops = 0
+        theta_out = np.zeros(nev)
+        res_out = np.full(nev, np.inf)
+        start_restart = 0
     converged = False
-    theta_out = np.zeros(nev)
-    res_out = np.full(nev, np.inf)
-    restarts = 0
+    restarts = start_restart
 
-    for restarts in range(max_restarts):
+    for restarts in range(start_restart, max_restarts):
         while v.ncols + b <= m_max:
             q, h, r_next = _expand(op, v, q, h, impl,
                                    fused_passes=fused_passes)
@@ -149,6 +173,15 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
         # A V_new = V_new Θ + Q S  with S = r_next @ y_keep[last rows]
         # regenerated automatically on next expansion via VᵀAQ.
 
+        if checkpointer is not None:
+            # restart boundary = snapshot point (module docstring); may
+            # raise SolveSuspended after committing on preemption
+            checkpointer.maybe_checkpoint(store, restarts + 1, lambda: {
+                "mvs": {"v": v},
+                "arrays": {"h": h, "q": np.asarray(q), "r_next": r_next,
+                           "theta_out": theta_out, "res_out": res_out},
+                "extra": {"n_ops": n_ops}})
+
     # --- materialize Ritz vectors: one more streamed pass (the same
     # multi-accumulator engine as restart compression — one read of V) ----
     vec = None
@@ -163,4 +196,6 @@ def eigsh(op, nev: int, *, block_size: int = 4, num_blocks: int | None = None,
         n_restarts=restarts, n_ops=n_ops, m_subspace=m_max,
         converged=converged,
         io_stats=store.stats.as_dict() if store else None,
+        resumed_step=(checkpointer.resumed_step
+                      if checkpointer is not None else None),
     )

@@ -32,6 +32,7 @@ previously streamed with no readahead at all). Pass-level rules:
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import List, Sequence
 
 import jax
@@ -71,6 +72,14 @@ class MultiVector:
         if name is None:
             MultiVector._counter += 1
             name = f"mv{MultiVector._counter}"
+        else:
+            # A resumed solve recreates MultiVectors under their
+            # checkpointed auto-names; keep the counter ahead of them so
+            # later auto-named instances can't collide in a shared store.
+            m = re.fullmatch(r"mv(\d+)", name)
+            if m:
+                MultiVector._counter = max(MultiVector._counter,
+                                           int(m.group(1)))
         if store is None:  # own store on the requested backend ("ram"|"safs")
             store = TieredStore(backend=backend, backend_opts=backend_opts)
         self.store = store

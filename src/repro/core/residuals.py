@@ -46,6 +46,7 @@ class EigResult:
     converged: bool
     io_stats: dict | None = None
     trace: object | None = None    # obs.Tracer when solve(..., trace=) was used
+    resumed_step: int | None = None  # checkpoint step this solve resumed from
 
 
 def true_residuals(op, x: jnp.ndarray, theta: Sequence[float]) -> np.ndarray:

@@ -74,6 +74,8 @@ class SolverContext:
     seed: int = 0
     compute_eigenvectors: bool = True
     callback: Optional[Callable] = None
+    checkpoint: Optional[object] = None   # ckpt.solver.CheckpointPolicy
+    resume: Optional[str] = None          # checkpoint root to resume from
     options: Dict = dataclasses.field(default_factory=dict)
     # method-specific extras (num_blocks, precond, at_op, ...)
 
@@ -92,19 +94,36 @@ class Solver(Protocol):
         ...
 
 
+def _make_checkpointer(ctx: SolverContext, method: str, *, block_size):
+    """Build the checkpoint/resume bridge for the methods that support it
+    (None when the context asks for neither). The solve-shape params are
+    recorded in every snapshot and verified on resume, so a checkpoint
+    can never silently continue a *different* solve."""
+    if ctx.checkpoint is None and ctx.resume is None:
+        return None
+    from repro.ckpt.solver import SolveCheckpointer
+    return SolveCheckpointer(
+        ctx.checkpoint, method=method,
+        resume_from=(os.fspath(ctx.resume) if ctx.resume else None),
+        params={"nev": ctx.nev, "which": ctx.which,
+                "block_size": block_size})
+
+
 class _KrylovSchur:
     name = "krylov_schur"
     default_which = "LM"
 
     def solve(self, ctx: SolverContext) -> EigResult:
+        b = ctx.block_size or 4
         return eigsh(
-            ctx.op, ctx.nev, block_size=ctx.block_size or 4,
+            ctx.op, ctx.nev, block_size=b,
             num_blocks=ctx.options.get("num_blocks"),
             tol=ctx.tol, max_restarts=ctx.max_iters, which=ctx.which,
             store=ctx.store, impl=ctx.impl, seed=ctx.seed,
             group_size=ctx.options.get("group_size", 8),
             compute_eigenvectors=ctx.compute_eigenvectors,
-            fused_passes=ctx.fused_passes, callback=ctx.callback)
+            fused_passes=ctx.fused_passes, callback=ctx.callback,
+            checkpointer=_make_checkpointer(ctx, self.name, block_size=b))
 
 
 class _Lanczos:
@@ -132,7 +151,9 @@ class _Lobpcg:
             precond=ctx.options.get("precond"), store=ctx.store,
             seed=ctx.seed, impl=ctx.impl, fused_passes=ctx.fused_passes,
             group_size=ctx.options.get("group_size", 8),
-            callback=ctx.callback)
+            callback=ctx.callback,
+            checkpointer=_make_checkpointer(
+                ctx, self.name, block_size=ctx.block_size or ctx.nev))
 
 
 class _Svd:
@@ -203,6 +224,7 @@ def solve(op, nev: int, *, method: str = "krylov_schur",
           compute_eigenvectors: bool = True,
           callback: Callable | None = None,
           trace: Union[obs_trace.Tracer, str, os.PathLike, None] = None,
+          checkpoint=None, resume: Union[str, os.PathLike, None] = None,
           **options) -> EigResult:
     """Solve for `nev` eigenpairs of `op` with the chosen family member.
 
@@ -234,12 +256,27 @@ def solve(op, nev: int, *, method: str = "krylov_schur",
     to `python -m repro.obs.report` for the human/CI report or
     `write_chrome()` for Perfetto.
 
+    checkpoint: a `ckpt.solver.CheckpointPolicy(root, every_restarts=N,
+    guard=...)` — the solve snapshots its full state at restart (eigsh) /
+    iteration (lobpcg) boundaries into `root` and, when the policy's
+    `ft.PreemptionGuard` fires mid-solve, finishes the in-flight restart,
+    checkpoints, and raises `ckpt.solver.SolveSuspended` (exit-resumable
+    SIGTERM handling). resume: a checkpoint root to continue from — the
+    solve restores the newest committed snapshot bit-identically and
+    walks on; pass both to keep checkpointing after a resume. Supported
+    by the out-of-core iterative methods ("krylov_schur", "lobpcg").
+
     All remaining keyword arguments land in `SolverContext.options`
     (num_blocks, group_size, precond, at_op, ...).
     """
     if method not in _REGISTRY:
         raise ValueError(f"unknown method {method!r}; "
                          f"registered: {solver_names()}")
+    if (checkpoint is not None or resume is not None) and method not in (
+            "krylov_schur", "lobpcg"):
+        raise ValueError(
+            f"checkpoint/resume is supported for methods "
+            f"'krylov_schur' and 'lobpcg', not {method!r}")
     solver = _REGISTRY[method]
     is_transform = CAP_SPECTRAL_TRANSFORM in capabilities(op)
     if which is None:
@@ -264,7 +301,9 @@ def solve(op, nev: int, *, method: str = "krylov_schur",
         op=op, nev=nev, which=which, tol=tol, max_iters=max_iters,
         store=store or TieredStore(), block_size=block_size, ortho=ortho,
         impl=impl, seed=seed, compute_eigenvectors=compute_eigenvectors,
-        callback=callback, options=options)
+        callback=callback, checkpoint=checkpoint,
+        resume=os.fspath(resume) if resume is not None else None,
+        options=options)
 
     if tracer is None:
         res = solver.solve(ctx)

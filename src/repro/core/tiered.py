@@ -64,6 +64,7 @@ class IOStats:
     cache_misses: int = 0
     passes: int = 0                # streamed whole-subspace reads (§3.4.3)
     pass_bytes_read: int = 0       # host bytes read INSIDE those passes
+    retries: int = 0               # transient-I/O retries absorbed (safs)
 
     def bytes_per_pass(self) -> float:
         """Average slow-tier bytes read per streamed subspace pass — the

@@ -1,1 +1,12 @@
-"""repro.ft"""
+"""repro.ft — fault-tolerance primitives (see README.md here).
+
+Preemption-safe shutdown, file-based membership coordination, straggler
+detection. The solver-side consumer is `ckpt.solver.SolveCheckpointer`
+(pass a `PreemptionGuard` in its `CheckpointPolicy`).
+"""
+from repro.ft.coordinator import Coordinator
+from repro.ft.preemption import PreemptionGuard
+from repro.ft.straggler import StragglerDecision, StragglerTracker
+
+__all__ = ["Coordinator", "PreemptionGuard", "StragglerDecision",
+           "StragglerTracker"]

@@ -36,10 +36,18 @@ class Coordinator:
         for fn in os.listdir(hb):
             if not fn.endswith(".json"):
                 continue
-            with open(os.path.join(hb, fn)) as f:
-                t = json.load(f)["t"]
+            try:
+                with open(os.path.join(hb, fn)) as f:
+                    t = json.load(f)["t"]
+                member = int(fn.split(".")[0])
+            except (json.JSONDecodeError, KeyError, TypeError, ValueError,
+                    OSError):
+                # a truncated/corrupt/vanished heartbeat is a DEAD member
+                # (a node killed mid-write), not a coordinator crash — the
+                # membership change is exactly what generation() must see
+                continue
             if now - t <= self.timeout:
-                out.append(int(fn.split(".")[0]))
+                out.append(member)
         return sorted(out)
 
     def generation(self) -> tuple[int, list[int]]:

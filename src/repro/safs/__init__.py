@@ -6,6 +6,9 @@ from repro.safs.pagefile import (PAGE_SIZE, CrashPoint, PageFile,
                                  coalesce_runs)
 from repro.safs.cache import PageCache, WriteBehind, WriteBehindError
 from repro.safs.prefetch import PrefetchError, Prefetcher
+from repro.safs.faults import (DEFAULT_RETRY, FaultPlan, FaultRule,
+                               RetryPolicy, SafsIOError, TransientIOError,
+                               is_transient, with_retries)
 from repro.safs.backend import (RamBackend, SafsBackend, StorageBackend,
                                 make_backend)
 
@@ -13,5 +16,7 @@ __all__ = [
     "PAGE_SIZE", "CrashPoint", "PageFile", "coalesce_runs",
     "PageCache", "WriteBehind", "WriteBehindError",
     "PrefetchError", "Prefetcher",
+    "DEFAULT_RETRY", "FaultPlan", "FaultRule", "RetryPolicy",
+    "SafsIOError", "TransientIOError", "is_transient", "with_retries",
     "RamBackend", "SafsBackend", "StorageBackend", "make_backend",
 ]

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.tiered import IOStats
 from repro.obs import trace
 from repro.safs.cache import PageCache, WriteBehind
+from repro.safs.faults import DEFAULT_RETRY, FaultPlan, RetryPolicy
 from repro.safs.pagefile import PAGE_SIZE, PageFile
 from repro.safs.prefetch import PrefetchError, Prefetcher
 
@@ -113,7 +114,9 @@ class SafsBackend:
                  cache_bytes: int = 64 << 20, use_mmap: bool = False,
                  enable_prefetch: bool = True, io_workers: int = 2,
                  readahead_depth: int = 8, write_behind: bool = True,
-                 wb_max_pages: int = 4096, pin_pages: bool = True):
+                 wb_max_pages: int = 4096, pin_pages: bool = True,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = DEFAULT_RETRY):
         self.root = root
         self.page_size = int(page_size)
         self.use_mmap = use_mmap
@@ -121,6 +124,14 @@ class SafsBackend:
         # pin_pages=False degrades the cache to plain LRU (no §3.4.4
         # most-recent-matrix pin) — the measured baseline in bench_safs
         self.pin_pages = bool(pin_pages)
+        # faults: a seeded repro.safs.faults.FaultPlan consulted at every
+        # I/O boundary (tests script failure interleavings with it; the
+        # solver checkpointer discovers it here for its own sites).
+        # retry: transient-error policy applied to every preadv/pwritev
+        # chunk and write-behind retire; retries are counted in
+        # stats.retries and emitted as safs.retry trace events.
+        self.faults = faults
+        self.retry = retry
         os.makedirs(root, exist_ok=True)
         self._files: Dict[str, PageFile] = {}
         self._lock = threading.RLock()
@@ -130,10 +141,24 @@ class SafsBackend:
         if write_behind:
             self.writebehind = WriteBehind(self._writeback_sync,
                                            max_pages=wb_max_pages,
-                                           stats=self.stats)
+                                           stats=self.stats,
+                                           retry=retry, faults=faults,
+                                           on_retry=self._count_retry)
         self.prefetcher = Prefetcher(self._fill, io_workers=io_workers,
-                                     depth=readahead_depth)
+                                     depth=readahead_depth,
+                                     on_retry=self._count_retry)
         self._reopen()
+
+    def _count_retry(self, **kw) -> None:
+        """on_retry sink for every retry site (page files, write-behind,
+        prefetch workers): one IOStats counter, so `stats_dict()["io"]
+        ["retries"]` reconciles 1:1 with the `safs.retry` trace events."""
+        with self._lock:
+            self.stats.retries += 1
+
+    def _open_pagefile(self, path: str, **kw) -> PageFile:
+        return PageFile(path, use_mmap=self.use_mmap, faults=self.faults,
+                        retry=self.retry, on_retry=self._count_retry, **kw)
 
     # ------------------------------------------------------------- naming
     def _path(self, data_id: str) -> str:
@@ -149,8 +174,8 @@ class SafsBackend:
             if f.endswith(".pages") and os.path.exists(
                     os.path.join(self.root, f + ".meta")):
                 data_id = self._unpath(f)
-                self._files[data_id] = PageFile(
-                    os.path.join(self.root, f), use_mmap=self.use_mmap)
+                self._files[data_id] = self._open_pagefile(
+                    os.path.join(self.root, f))
 
     def pagefile(self, data_id: str) -> PageFile:
         return self._files[data_id]
@@ -268,9 +293,9 @@ class SafsBackend:
         with self._lock:
             pf = self._files.get(data_id)
             if pf is None:
-                pf = PageFile(self._path(data_id), page_size=self.page_size,
-                              shape=a.shape, dtype=a.dtype.name,
-                              use_mmap=self.use_mmap)
+                pf = self._open_pagefile(self._path(data_id),
+                                         page_size=self.page_size,
+                                         shape=a.shape, dtype=a.dtype.name)
                 self._files[data_id] = pf
         for i, payload in pf.split(a).items():
             self.cache.put(data_id, i, payload, dirty=True)
@@ -438,7 +463,8 @@ class SafsBackend:
 def make_backend(spec, **opts) -> StorageBackend:
     """Factory: 'ram', 'safs' (opts: root, page_size, cache_bytes,
     use_mmap, io_workers, readahead_depth, write_behind, wb_max_pages,
-    pin_pages), or pass through an already-constructed backend."""
+    pin_pages, faults, retry), or pass through an already-constructed
+    backend."""
     if not isinstance(spec, str):
         return spec
     if spec == "ram":

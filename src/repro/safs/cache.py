@@ -36,6 +36,8 @@ from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.tiered import IOStats
 from repro.obs import trace
+from repro.safs.faults import (DEFAULT_RETRY, FaultPlan, OnRetry,
+                               RetryPolicy, with_retries)
 
 Key = Tuple[str, int]
 
@@ -273,13 +275,28 @@ class WriteBehind:
     thread with the *actual* bytes the journaled writer reported, so
     physical-endurance accounting stays byte-exact even when queue merging
     collapses a resubmitted page into one write.
+
+    Fault tolerance: each retire is retried with backoff on transient
+    errors per `retry` (site "wb.retire"; an attached `FaultPlan` is
+    consulted there too). Exhaustion raises a typed `SafsIOError`
+    carrying file/attempt context, which is captured like any writer
+    failure and surfaces at the next `drain()` as `WriteBehindError`
+    (the SafsIOError is its __cause__). Retries are counted in
+    `stats_dict()["retries"]` and through `on_retry`.
     """
 
     def __init__(self, writer: Callable[[str, Dict[int, bytes]], int], *,
-                 max_pages: int = 4096, stats: Optional["IOStats"] = None):
+                 max_pages: int = 4096, stats: Optional["IOStats"] = None,
+                 retry: Optional[RetryPolicy] = DEFAULT_RETRY,
+                 faults: Optional[FaultPlan] = None,
+                 on_retry: Optional[OnRetry] = None):
         self._writer = writer
         self.max_pages = max(1, int(max_pages))
         self._stats = stats
+        self._retry = retry
+        self._faults = faults
+        self._on_retry = on_retry
+        self.retries = 0               # retire attempts that were retried
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._pending: "OrderedDict[str, Dict[int, bytes]]" = OrderedDict()
@@ -320,7 +337,7 @@ class WriteBehind:
             try:
                 with trace.span("safs.wb.retire", file=data_id,
                                 pages=len(pages)) as sp:
-                    written = self._writer(data_id, pages)
+                    written = self._retire(data_id, pages)
                     sp.set(bytes=written)
             except BaseException as e:
                 err = e
@@ -346,6 +363,27 @@ class WriteBehind:
                             batch[p] = data
                             self._n_pending += 1
                 self._cv.notify_all()
+
+    def _retire(self, data_id: str, pages: Dict[int, bytes]) -> int:
+        """One journaled batch write, retried on transient errors. The
+        fault-plan check ("wb.retire") runs inside the retry unit so an
+        injected transient fault is absorbed, while an injected CrashPoint
+        propagates (non-transient) and is captured as the queue error."""
+
+        def attempt() -> int:
+            if self._faults is not None:
+                self._faults.check("wb.retire", file=data_id,
+                                   pages=len(pages))
+            return self._writer(data_id, pages)
+
+        return with_retries(attempt, self._retry, site="wb.retire",
+                            file=data_id, on_retry=self._count_retry)
+
+    def _count_retry(self, **kw) -> None:
+        with self._lock:
+            self.retries += 1
+        if self._on_retry is not None:
+            self._on_retry(**kw)
 
     # ----------------------------------------------------------- frontend
     def _raise_pending_error(self) -> None:
@@ -466,7 +504,8 @@ class WriteBehind:
                     "bytes_retired": self.bytes_retired,
                     "batches_retired": self.batches_retired,
                     "max_depth_pages": self.max_depth_pages,
-                    "pending_pages": self.pending_pages_locked()}
+                    "pending_pages": self.pending_pages_locked(),
+                    "retries": self.retries}
 
     def close(self) -> None:
         with self._cv:

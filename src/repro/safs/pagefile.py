@@ -25,7 +25,12 @@ Table 3). This module is the byte level of our reproduction of that layer:
 
 Tests inject crashes with the `crash_after_pages` / `crash_in_journal`
 hooks instead of killing the process; the on-disk states they produce are
-exactly the ones a mid-flush kill leaves behind.
+exactly the ones a mid-flush kill leaves behind. `repro.safs.faults`
+generalizes those hooks into seeded schedules (`PageFile(faults=plan)`):
+the plan is consulted at every preadv/pwritev chunk and at the journal
+pre-commit/commit boundaries, and transient errors at those sites are
+absorbed by bounded retry with backoff (`retry=RetryPolicy(...)`,
+counted via `on_retry` and emitted as `safs.retry` trace events).
 """
 from __future__ import annotations
 
@@ -36,6 +41,9 @@ import zlib
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.safs.faults import (CrashPoint, DEFAULT_RETRY, FaultPlan,
+                               OnRetry, RetryPolicy, with_retries)
 
 PAGE_SIZE = 4096                       # SAFS default page size (§3.4.1)
 
@@ -62,9 +70,9 @@ _JOURNAL_MAGIC = b"SAFSJRNL"
 _COMMIT = b"COMMITTD"
 _HDR = struct.Struct("<qII")           # page_index, crc32, payload_len
 
-
-class CrashPoint(RuntimeError):
-    """Raised by the test-only crash hooks to simulate a mid-flush kill."""
+# CrashPoint moved to repro.safs.faults (the fault-injection layer owns the
+# error taxonomy); re-exported here for existing importers.
+__all__ = ["PAGE_SIZE", "CrashPoint", "PageFile", "coalesce_runs"]
 
 
 def _meta_path(path: str) -> str:
@@ -84,10 +92,16 @@ class PageFile:
 
     def __init__(self, path: str, *, page_size: int = PAGE_SIZE,
                  shape: tuple | None = None, dtype: str = "float32",
-                 use_mmap: bool = False):
+                 use_mmap: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = DEFAULT_RETRY,
+                 on_retry: Optional[OnRetry] = None):
         self.path = path
         self.page_size = int(page_size)
         self.use_mmap = use_mmap
+        self.faults = faults
+        self.retry = retry
+        self.on_retry = on_retry
         self._mmap = None
         meta = _meta_path(path)
         if os.path.exists(meta):
@@ -129,29 +143,48 @@ class PageFile:
     def read_run(self, start: int, count: int) -> List[bytes]:
         """Read `count` consecutive pages with one vectored syscall per
         _IOV_MAX pages: a single preadv into per-page buffers replaces
-        `count` python pread calls (the 4 KiB-grain fast path)."""
+        `count` python pread calls (the 4 KiB-grain fast path). Each
+        chunk is a retry unit: transient errors (injected or real EIO)
+        are retried with backoff per `self.retry`; exhaustion raises
+        `SafsIOError` with file/page context."""
         assert 0 <= start and start + count <= self.n_pages, \
             (start, count, self.n_pages)
         if self.use_mmap:
             return [self.read_page(start + k) for k in range(count)]
-        ps = self.page_size
         out: List[bytes] = []
         done = 0
         while done < count:
             nv = min(count - done, _IOV_MAX)   # bounds the staging buffer
+            out.extend(self._read_chunk(start + done, nv))
+            done += nv
+        return out
+
+    def _read_chunk(self, start: int, nv: int) -> List[bytes]:
+        ps = self.page_size
+
+        def attempt() -> List[bytes]:
+            action = None
+            if self.faults is not None:
+                action = self.faults.check("pread", file=self.path,
+                                           page=start, pages=nv)
             mv = memoryview(bytearray(nv * ps))
-            off = (start + done) * ps
+            off = start * ps
             want = nv * ps
-            got = os.preadv(self._fd, [mv], off)
+            # an injected short read truncates the FIRST preadv to one
+            # page; the continuation loop below must complete the chunk
+            first = ps if (action == "short_read" and want > ps) else want
+            got = os.preadv(self._fd, [mv[:first]], off)
             while got < want:          # short read (signal/EOF-adjacent)
                 n = os.preadv(self._fd, [mv[got:]], off + got)
                 if n <= 0:
                     raise IOError(
-                        f"short preadv at page {start + done + got // ps}")
+                        f"short preadv at page {start + got // ps}")
                 got += n
-            out.extend(bytes(mv[k * ps:(k + 1) * ps]) for k in range(nv))
-            done += nv
-        return out
+            return [bytes(mv[k * ps:(k + 1) * ps]) for k in range(nv)]
+
+        return with_retries(attempt, self.retry, site="pread",
+                            file=self.path, page=start,
+                            on_retry=self.on_retry)
 
     def read_pages_batch(self, indices: Sequence[int]) -> Dict[int, bytes]:
         """Batched page read: coalesce `indices` into contiguous runs and
@@ -197,9 +230,14 @@ class PageFile:
                     raise CrashPoint("crash before journal commit")
             j.flush()
             os.fsync(j.fileno())
+            # journal durable, commit trailer not: a crash here discards
+            self._fault("journal.precommit", pages=len(pages))
             j.write(_COMMIT)
             j.flush()
             os.fsync(j.fileno())
+        # journal committed, in-place patch not started: a crash from
+        # here on is redone on reopen (the batch is already durable)
+        self._fault("journal.commit", pages=len(pages))
         written = 0
         if crash_after_pages is not None or self._mmap is not None:
             # crash-hook path keeps the per-page write granularity the
@@ -218,29 +256,48 @@ class PageFile:
             pass      # a concurrent reopen already recovered + unlinked it
         return written
 
+    def _fault(self, site: str, **ctx) -> Optional[str]:
+        if self.faults is not None:
+            return self.faults.check(site, file=self.path, **ctx)
+        return None
+
     def _pwritev_runs(self, pages: Dict[int, bytes]) -> int:
-        """In-place patch as one vectored pwritev per contiguous run."""
+        """In-place patch as one vectored pwritev per contiguous run.
+        Each chunk is a retry unit (idempotent: same bytes, same
+        offsets), so a transient mid-patch error costs a re-write of the
+        chunk, never a torn page — the journal is already committed."""
         written = 0
         for start, count in coalesce_runs(pages.keys()):
             done = 0
             while done < count:
                 nv = min(count - done, _IOV_MAX)
-                bufs = [pages[start + done + k] for k in range(nv)]
-                for b in bufs:         # offsets assume full pages
-                    assert len(b) == self.page_size, len(b)
-                off = (start + done) * self.page_size
-                want = nv * self.page_size
-                got = os.pwritev(self._fd, bufs, off)
-                while got < want:      # short write: retry the remainder
-                    flat = b"".join(bufs)
-                    n = os.pwrite(self._fd, flat[got:], off + got)
-                    if n <= 0:
-                        raise IOError(
-                            f"short pwrite at page {start + done + got // self.page_size}")
-                    got += n
-                written += want
+                written += self._write_chunk(pages, start + done, nv)
                 done += nv
         return written
+
+    def _write_chunk(self, pages: Dict[int, bytes], start: int,
+                     nv: int) -> int:
+        def attempt() -> int:
+            self._fault("pwritev", page=start, pages=nv)
+            bufs = [pages[start + k] for k in range(nv)]
+            for b in bufs:             # offsets assume full pages
+                assert len(b) == self.page_size, len(b)
+            off = start * self.page_size
+            want = nv * self.page_size
+            got = os.pwritev(self._fd, bufs, off)
+            while got < want:          # short write: retry the remainder
+                flat = b"".join(bufs)
+                n = os.pwrite(self._fd, flat[got:], off + got)
+                if n <= 0:
+                    raise IOError(
+                        f"short pwrite at page "
+                        f"{start + got // self.page_size}")
+                got += n
+            return want
+
+        return with_retries(attempt, self.retry, site="pwritev",
+                            file=self.path, page=start,
+                            on_retry=self.on_retry)
 
     def _recover(self) -> None:
         """Replay a committed journal; discard an uncommitted one."""

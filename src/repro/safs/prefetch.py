@@ -37,6 +37,7 @@ from collections import deque
 from typing import Callable, Deque, Dict, Optional
 
 from repro.obs import trace
+from repro.safs.faults import OnRetry, is_transient
 
 
 class PrefetchError(RuntimeError):
@@ -54,11 +55,22 @@ class Prefetcher:
         depth; one python thread per in-flight file works the GIL because
         preadv releases it).
     depth: readahead window — max files queued beyond the ones in flight.
+    retries: whole-fill retries a worker attempts on a *transient* reader
+        error before capturing it for `wait()` — a second defense above
+        the page-level retry inside `PageFile.read_run` (which already
+        absorbs transient preadv errors; this layer catches transient
+        failures that escape it, e.g. around the fill's staging logic).
+        Retries are counted (`stats()["read_retries"]`), emitted as
+        `safs.retry` trace events and reported through `on_retry`.
     """
 
     def __init__(self, reader: Callable[[str], int], *,
-                 io_workers: int = 2, depth: int = 8):
+                 io_workers: int = 2, depth: int = 8, retries: int = 1,
+                 on_retry: Optional[OnRetry] = None):
         self._reader = reader
+        self.retries = max(0, int(retries))
+        self._on_retry = on_retry
+        self.read_retries = 0
         self.io_workers = max(1, int(io_workers))
         self.depth = max(1, int(depth))
         self._lock = threading.Lock()
@@ -92,10 +104,25 @@ class Prefetcher:
             t0 = time.perf_counter()
             err: Optional[BaseException] = None
             n = 0
-            try:
-                n = self._reader(data_id)
-            except BaseException as e:   # captured, re-raised at wait()
-                err = e
+            for attempt in range(self.retries + 1):
+                err = None
+                try:
+                    n = self._reader(data_id)
+                    break
+                except BaseException as e:  # captured, re-raised at wait()
+                    err = e
+                    if attempt >= self.retries or not is_transient(e):
+                        break
+                    with self._lock:
+                        self.read_retries += 1
+                    trace.event("safs.retry", site="prefetch", file=data_id,
+                                attempt=attempt + 1,
+                                error=type(e).__name__)
+                    if self._on_retry is not None:
+                        self._on_retry(site="prefetch", file=data_id,
+                                       page=None, attempt=attempt + 1,
+                                       error=e)
+                    time.sleep(0.002 * (attempt + 1))
             dt = time.perf_counter() - t0
             with self._lock:
                 self.busy_seconds += dt
@@ -180,6 +207,7 @@ class Prefetcher:
                     "files_prefetched": self.files_prefetched,
                     "files_dropped": self.files_dropped,
                     "read_errors": self.read_errors,
+                    "read_retries": self.read_retries,
                     "io_workers": self.io_workers,
                     "depth": self.depth}
 

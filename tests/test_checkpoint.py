@@ -93,3 +93,28 @@ def test_trainer_restart_resumes(tmp_path):
                      log_every=100)
     s2 = train(cfg, t2, dcfg, log=lambda *_: None)
     assert s2["steps_run"] == 2          # only steps 4,5
+
+
+def test_latest_step_gcs_stale_tmp(tmp_path):
+    """A crash mid-`save` leaves a step_*.tmp staging dir behind.
+    `latest_step` must never mistake it for a checkpoint, must reclaim it
+    once it is clearly abandoned (old mtime), and must leave a *fresh*
+    .tmp alone — that one may be an AsyncWriter mid-flight."""
+    import time
+    t = _tree()
+    ck.save(str(tmp_path), 4, t)
+    stale = tmp_path / "step_0000000009.tmp"
+    fresh = tmp_path / "step_0000000011.tmp"
+    os.makedirs(stale)
+    os.makedirs(fresh)
+    (stale / "leaf.npz").write_bytes(b"partial")
+    old = time.time() - 7200
+    os.utime(stale, (old, old))
+    assert ck.latest_step(str(tmp_path)) == 4
+    assert not stale.exists()           # abandoned staging dir reclaimed
+    assert fresh.exists()               # in-flight writer untouched
+    # and opting out leaves everything in place
+    os.makedirs(stale)
+    os.utime(stale, (old, old))
+    assert ck.latest_step(str(tmp_path), gc_stale_tmp=False) == 4
+    assert stale.exists()

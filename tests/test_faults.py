@@ -1,0 +1,543 @@
+"""Fault-tolerant solves: seeded fault injection, retry/backoff, and the
+crash/resume kill matrix.
+
+Layer coverage:
+  * FaultPlan / with_retries unit semantics (deterministic schedules,
+    transient-vs-final classification, exhaustion context);
+  * SAFS hardening under injected faults — transient EIO absorbed by
+    bounded retry with the retries reconciling between `stats_dict()`
+    and `safs.retry` trace events, persistent EIO surfacing a typed
+    `SafsIOError`, short reads exercising the continuation loop,
+    write-behind retire retries, prefetch-worker retries;
+  * checkpoint-suspend/resume — in-RAM preemption suspend for both
+    methods, and the KILL MATRIX: a seeded `CrashPoint` at every crash
+    class (journal commit, write-behind retire, checkpoint save, restart
+    boundary) × {eigsh, lobpcg}, resume from the surviving checkpoint,
+    final spectrum matching the uninterrupted solve at rtol 1e-5 with at
+    most one extra restart.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import GraphOperator, TieredStore
+from repro.core.solver import solve
+from repro.ckpt.solver import CheckpointPolicy, SolveSuspended
+from repro.graphs import pack_tiles, rmat_graph, normalized_adjacency
+from repro.obs import trace as obs_trace
+from repro.safs import WriteBehindError
+from repro.safs.faults import (CrashPoint, FaultPlan, FaultRule,
+                               RetryPolicy, SafsIOError, TransientIOError,
+                               is_transient, with_retries)
+
+# fast backoff for tests — same exhaustion semantics, ~zero sleeping
+FAST_RETRY = RetryPolicy(max_attempts=3, base_delay=1e-4, max_delay=1e-3)
+
+
+# --------------------------------------------------------------- fault plan
+def test_fault_rule_schedule_at_times():
+    plan = FaultPlan([FaultRule(site="pread", kind="eio", at=2, times=2)])
+    assert plan.check("pread") is None                     # hit 1
+    for _ in range(2):                                     # hits 2, 3
+        with pytest.raises(TransientIOError):
+            plan.check("pread")
+    assert plan.check("pread") is None                     # hit 4
+    assert plan.hits("pread") == 4
+    assert len(plan.fired(kind="eio")) == 2
+
+
+def test_fault_rule_glob_sites_and_files():
+    plan = FaultPlan([FaultRule(site="journal.*", kind="crash",
+                                file_glob="x.pages")])
+    assert plan.check("journal.commit", file="/tmp/y.pages") is None
+    with pytest.raises(CrashPoint):
+        plan.check("journal.precommit", file="/tmp/x.pages")
+    assert plan.fired(site="journal.precommit", kind="crash")
+
+
+def test_fault_rule_prob_is_seeded():
+    def fires(seed):
+        plan = FaultPlan([FaultRule(site="pread", kind="eio", prob=0.5)],
+                         seed=seed)
+        out = []
+        for i in range(20):
+            try:
+                plan.check("pread")
+                out.append(False)
+            except TransientIOError:
+                out.append(True)
+        return out
+    assert fires(7) == fires(7)          # deterministic under one seed
+    assert fires(7) != fires(8)          # and actually seed-dependent
+
+
+def test_fault_rule_short_read_and_latency():
+    plan = FaultPlan([FaultRule(site="pread", kind="short_read"),
+                      FaultRule(site="pread", kind="latency", delay=0.0)])
+    assert plan.check("pread") == "short_read"
+    assert plan.check("pread") is None
+
+
+def test_fault_rule_unknown_kind_rejected():
+    with pytest.raises(ValueError):
+        FaultRule(site="pread", kind="disk_on_fire")
+
+
+# ------------------------------------------------------------ with_retries
+def test_with_retries_absorbs_transients_and_reports():
+    calls, seen = [0], []
+    def fn():
+        calls[0] += 1
+        if calls[0] < 3:
+            raise TransientIOError("flaky")
+        return "ok"
+    out = with_retries(fn, FAST_RETRY, site="pread", file="f", page=7,
+                       on_retry=lambda **kw: seen.append(kw))
+    assert out == "ok" and calls[0] == 3
+    assert [s["attempt"] for s in seen] == [1, 2]
+    assert all(s["site"] == "pread" and s["page"] == 7 for s in seen)
+
+
+def test_with_retries_exhaustion_carries_context():
+    def fn():
+        raise TransientIOError("always")
+    with pytest.raises(SafsIOError) as ei:
+        with_retries(fn, FAST_RETRY, site="pwritev", file="f.pages", page=3)
+    e = ei.value
+    assert (e.site, e.file, e.page, e.attempts) == ("pwritev", "f.pages",
+                                                    3, 3)
+    assert isinstance(e.__cause__, TransientIOError)
+    assert not is_transient(e)          # exhausted errors are final
+    for field in ("site=pwritev", "page=3", "attempts=3"):
+        assert field in str(e)
+
+
+def test_with_retries_passes_final_errors_through():
+    def fn():
+        raise ValueError("not io")
+    with pytest.raises(ValueError):
+        with_retries(fn, FAST_RETRY, site="pread")
+    def crash():
+        raise CrashPoint("kill")
+    with pytest.raises(CrashPoint):     # crashes are never retried
+        with_retries(crash, FAST_RETRY, site="pread")
+
+
+def test_with_retries_none_policy_single_attempt():
+    calls = [0]
+    def fn():
+        calls[0] += 1
+        raise TransientIOError("x")
+    with pytest.raises(TransientIOError):
+        with_retries(fn, None, site="pread")
+    assert calls[0] == 1
+
+
+# -------------------------------------------------------- prefetch retries
+def test_prefetcher_retries_transient_reader():
+    from repro.safs.prefetch import Prefetcher
+    calls, hooks = [0], []
+    def reader(data_id):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise TransientIOError("first fill flaky")
+        return 64
+    p = Prefetcher(reader, io_workers=1, retries=2,
+                   on_retry=lambda **kw: hooks.append(kw))
+    try:
+        p.schedule(["f"])
+        p.wait("f")
+        assert calls[0] == 2
+        assert p.stats()["read_retries"] == 1
+        assert hooks and hooks[0]["site"] == "prefetch"
+    finally:
+        p.close()
+
+
+def test_prefetcher_gives_up_on_final_error():
+    from repro.safs.prefetch import PrefetchError, Prefetcher
+    def reader(data_id):
+        raise ValueError("not transient")
+    p = Prefetcher(reader, io_workers=1, retries=3)
+    try:
+        p.schedule(["f"])
+        with pytest.raises(PrefetchError):
+            p.wait("f")
+        assert p.stats()["read_retries"] == 0
+    finally:
+        p.close()
+
+
+# ------------------------------------------------------------ safs hardening
+def _mk_backend(root, plan, *, retry=FAST_RETRY, **opts):
+    from repro.safs.backend import SafsBackend
+    opts.setdefault("cache_bytes", 1 << 20)
+    opts.setdefault("enable_prefetch", False)
+    return SafsBackend(root, faults=plan, retry=retry, **opts)
+
+
+@pytest.mark.disk
+def test_pread_transient_eio_absorbed_and_counted(disk_tmp):
+    plan = FaultPlan([FaultRule(site="pread", kind="eio", at=1, times=2)])
+    b = _mk_backend(os.path.join(disk_tmp, "s"), plan, write_behind=False)
+    a = np.arange(4096, dtype=np.float32).reshape(64, 64)
+    tracer = obs_trace.Tracer()
+    with obs_trace.tracing(tracer):
+        b.store("x", a)
+        b.flush()
+        b.cache.invalidate("x", drop_dirty=True)
+        got = b.load("x")
+    np.testing.assert_array_equal(got, a)
+    events = [r for r in tracer.records() if r.get("name") == "safs.retry"]
+    assert b.stats.retries == 2 == len(events)
+    assert b.stats_dict()["io"]["retries"] == 2
+    assert all(e["args"]["site"] == "pread" for e in events)
+    b.close()
+
+
+@pytest.mark.disk
+def test_pread_exhaustion_raises_typed_error(disk_tmp):
+    plan = FaultPlan([FaultRule(site="pread", kind="eio", times=None)])
+    b = _mk_backend(os.path.join(disk_tmp, "s"), plan, write_behind=False)
+    a = np.zeros((64, 64), np.float32)
+    b.store("x", a)
+    b.flush()
+    b.cache.invalidate("x", drop_dirty=True)
+    with pytest.raises(SafsIOError) as ei:
+        b.load("x")
+    assert ei.value.site == "pread"
+    assert ei.value.attempts == FAST_RETRY.max_attempts
+    assert ei.value.file and ei.value.file.endswith(".pages")
+    assert ei.value.page is not None
+    # the absorbed retries before exhaustion are still counted
+    assert b.stats.retries == FAST_RETRY.max_attempts - 1
+
+
+@pytest.mark.disk
+def test_short_read_injection_hits_continuation_loop(disk_tmp):
+    plan = FaultPlan([FaultRule(site="pread", kind="short_read")])
+    b = _mk_backend(os.path.join(disk_tmp, "s"), plan, write_behind=False)
+    a = np.arange(32768, dtype=np.float32)      # many pages in one run
+    b.store("y", a)
+    b.flush()
+    b.cache.invalidate("y", drop_dirty=True)
+    np.testing.assert_array_equal(b.load("y"), a)
+    assert plan.fired(kind="short_read")
+    b.close()
+
+
+@pytest.mark.disk
+def test_pwritev_transient_eio_absorbed(disk_tmp):
+    plan = FaultPlan([FaultRule(site="pwritev", kind="eio", at=1, times=1)])
+    b = _mk_backend(os.path.join(disk_tmp, "s"), plan, write_behind=False)
+    a = np.arange(4096, dtype=np.float32)
+    b.store("x", a)
+    b.flush()
+    b.cache.invalidate("x", drop_dirty=True)
+    np.testing.assert_array_equal(b.load("x"), a)
+    assert b.stats.retries >= 1
+    b.close()
+
+
+@pytest.mark.disk
+def test_wb_retire_retries_then_exhausts(disk_tmp):
+    # one transient: absorbed, batch retires
+    plan = FaultPlan([FaultRule(site="wb.retire", kind="eio", times=1)])
+    b = _mk_backend(os.path.join(disk_tmp, "a"), plan, write_behind=True)
+    a = np.arange(4096, dtype=np.float32)
+    b.store("x", a)
+    b.flush()
+    assert b.writebehind.stats_dict()["retries"] == 1
+    assert b.stats.retries == 1                 # backend counter mirrors
+    b.cache.invalidate("x", drop_dirty=True)
+    np.testing.assert_array_equal(b.load("x"), a)
+    b.close()
+
+    # persistent: exhausts into SafsIOError, surfaces as WriteBehindError
+    # (with the typed error chained) at the drain barrier
+    plan2 = FaultPlan([FaultRule(site="wb.retire", kind="eio", times=None)])
+    b2 = _mk_backend(os.path.join(disk_tmp, "b"), plan2, write_behind=True)
+    b2.store("x", a)
+    with pytest.raises(WriteBehindError) as ei:
+        b2.flush()
+    assert isinstance(ei.value.__cause__, SafsIOError)
+    assert ei.value.__cause__.site == "wb.retire"
+
+
+@pytest.mark.disk
+def test_journal_crash_recovers_on_reopen(disk_tmp):
+    """CrashPoint at journal.commit = the journal is durable but the in-
+    place patch never ran — reopen must replay it (PR 4 contract, now
+    drivable from a FaultPlan instead of the ad-hoc crash hooks)."""
+    root = os.path.join(disk_tmp, "s")
+    plan = FaultPlan([FaultRule(site="journal.commit", kind="crash")])
+    b = _mk_backend(root, plan, write_behind=False)
+    a = np.arange(4096, dtype=np.float32)
+    b.store("z", a)
+    with pytest.raises(CrashPoint):
+        b.flush()
+    b2 = _mk_backend(root, None, write_behind=False)
+    np.testing.assert_array_equal(b2.load("z"), a)
+    b2.close()
+
+
+# ------------------------------------------------- solves under fault plans
+def _small_graph_op():
+    n = 400
+    r, c, v = rmat_graph(n, 4000, seed=5, symmetric=True)
+    r, c, v = normalized_adjacency(n, r, c, v)
+    tm = pack_tiles(n, n, r, c, v, block_shape=(64, 64), min_block_nnz=4)
+    return n, tm
+
+
+def _safs_store(root, *, plan=None, retry=FAST_RETRY, write_behind=True,
+                cache_bytes=1 << 18, **opts):
+    return TieredStore(backend="safs", backend_opts={
+        "root": root, "cache_bytes": cache_bytes,
+        "write_behind": write_behind, "faults": plan, "retry": retry,
+        **opts})
+
+
+@pytest.mark.disk
+def test_transient_fault_solve_completes_with_exact_accounting(disk_tmp):
+    """A solve through a flaky 'device' (scheduled EIO bursts on reads
+    AND writes) must converge to the clean spectrum, absorb every fault
+    as counted retries (stats ↔ trace reconciliation), and keep the
+    byte accounting identical to the fault-free run — failed attempts
+    never double-count bytes."""
+    n, tm = _small_graph_op()
+
+    def run(plan, trace=None):
+        # synchronous writes + no readahead: the pread/pwritev hit order
+        # is then deterministic, so the scheduled offsets below always
+        # land and the counters can be compared exactly; the tiny device
+        # budget + page cache force the subspace through real disk I/O
+        # (~300 pread / ~200 pwritev chunks over this solve)
+        store = TieredStore(
+            device_budget_bytes=2 * n * 4 * 4, backend="safs",
+            backend_opts={"root": os.path.join(disk_tmp, f"r{id(plan)}"),
+                          "cache_bytes": 1 << 14, "write_behind": False,
+                          "enable_prefetch": False, "faults": plan,
+                          "retry": FAST_RETRY})
+        res = solve(GraphOperator(tm, impl="ref"), 4, method="krylov_schur",
+                    tol=1e-6, max_iters=100, impl="ref", store=store,
+                    trace=trace)
+        return res, store
+
+    clean, clean_store = run(None)
+    plan = FaultPlan([FaultRule(site="pread", kind="eio", at=3, times=2),
+                      FaultRule(site="pread", kind="eio", at=11, times=1),
+                      FaultRule(site="pwritev", kind="eio", at=5, times=2)])
+    tracer = obs_trace.Tracer()
+    faulty, faulty_store = run(plan, trace=tracer)
+
+    assert clean.converged and faulty.converged
+    np.testing.assert_allclose(faulty.eigenvalues, clean.eigenvalues,
+                               rtol=1e-5)
+    phys = faulty_store.backend.stats_dict()["io"]
+    events = [r for r in tracer.records() if r.get("name") == "safs.retry"]
+    assert phys["retries"] == 5 == len(events)   # all scheduled faults hit
+    # byte-exactness: logical AND physical traffic identical to fault-free
+    clean_phys = clean_store.backend.stats_dict()["io"]
+    for k in ("host_bytes_read", "host_bytes_written"):
+        assert phys[k] == clean_phys[k], k
+        assert faulty.io_stats[k] == clean.io_stats[k], k
+
+
+# -------------------------------------------------------- suspend / resume
+class _Guard:
+    """Stand-in for ft.PreemptionGuard with a test-armed flag."""
+    def __init__(self, after):
+        self.after = after
+        self.n = 0
+        self.armed = False
+    def requested(self):
+        return self.armed
+    def cb(self, step, theta, res):
+        self.n += 1
+        if self.n == self.after:
+            self.armed = True
+
+
+@pytest.mark.parametrize("method,nev,kw", [
+    ("krylov_schur", 4, {"tol": 1e-6}),
+    ("lobpcg", 4, {"tol": 1e-5, "seed": 3}),
+])
+def test_preemption_suspend_resume_ram(tmp_path, method, nev, kw):
+    """In-RAM backend: guard fires mid-solve → SolveSuspended after the
+    boundary checkpoint commits → resumed solve converges to the clean
+    spectrum (bit-identical continuation) with ≤ 1 extra step."""
+    _n, tm = _small_graph_op()
+    def op():
+        return GraphOperator(tm, impl="ref")
+    ref = solve(op(), nev, method=method, max_iters=100, impl="ref", **kw)
+    assert ref.converged
+
+    g = _Guard(after=2)
+    root = str(tmp_path / "ck")
+    with pytest.raises(SolveSuspended) as ei:
+        solve(op(), nev, method=method, max_iters=100, impl="ref",
+              checkpoint=CheckpointPolicy(root=root, every_restarts=1,
+                                          guard=g),
+              callback=g.cb, **kw)
+    assert ei.value.root == root
+
+    res = solve(op(), nev, method=method, max_iters=100, impl="ref",
+                resume=root, **kw)
+    assert res.converged
+    assert res.resumed_step == ei.value.step
+    np.testing.assert_allclose(np.sort(res.eigenvalues),
+                               np.sort(ref.eigenvalues), rtol=1e-5)
+    assert res.n_restarts <= ref.n_restarts + 1
+
+
+def test_resume_rejects_other_solve_shape(tmp_path):
+    _n, tm = _small_graph_op()
+    root = str(tmp_path / "ck")
+    g = _Guard(after=1)
+    with pytest.raises(SolveSuspended):
+        solve(GraphOperator(tm, impl="ref"), 4, method="krylov_schur",
+              tol=1e-6, max_iters=100, impl="ref", callback=g.cb,
+              checkpoint=CheckpointPolicy(root=root, guard=g))
+    with pytest.raises(ValueError, match="params mismatch"):
+        solve(GraphOperator(tm, impl="ref"), 5, method="krylov_schur",
+              tol=1e-6, max_iters=100, impl="ref", resume=root)
+    with pytest.raises(ValueError, match="method"):
+        solve(GraphOperator(tm, impl="ref"), 4, method="lobpcg",
+              tol=1e-6, max_iters=100, impl="ref", resume=root)
+
+
+def test_checkpoint_unsupported_method_rejected():
+    _n, tm = _small_graph_op()
+    with pytest.raises(ValueError, match="checkpoint/resume"):
+        solve(GraphOperator(tm, impl="ref"), 4, method="lanczos",
+              checkpoint=CheckpointPolicy(root="/nonexistent"))
+
+
+def test_resume_from_empty_root_starts_fresh(tmp_path):
+    """Crash before the first snapshot: resume root exists but holds no
+    committed checkpoint — the solve silently starts from scratch."""
+    _n, tm = _small_graph_op()
+    ref = solve(GraphOperator(tm, impl="ref"), 4, method="krylov_schur",
+                tol=1e-6, max_iters=100, impl="ref")
+    res = solve(GraphOperator(tm, impl="ref"), 4, method="krylov_schur",
+                tol=1e-6, max_iters=100, impl="ref",
+                resume=str(tmp_path / "never_written"))
+    assert res.resumed_step is None
+    np.testing.assert_allclose(res.eigenvalues, ref.eigenvalues, rtol=1e-5)
+
+
+# ------------------------------------------------------------- kill matrix
+# Crash classes: every site is hit well after several checkpoints have
+# committed (the probe counts for this problem size: journal.commit ≈ 2
+# per eigsh restart / 6 per lobpcg iteration, wb.retire similar,
+# solve.restart / ckpt.save once per boundary) and well before
+# convergence (~48 boundaries).
+_CRASH_SCENARIOS = [
+    ("journal.commit", dict(at=30), {"write_behind": False}),
+    ("wb.retire", dict(at=30), {"write_behind": True}),
+    ("ckpt.save", dict(at=10), {"write_behind": True}),
+    ("solve.restart", dict(at=10), {"write_behind": True}),
+]
+_METHODS = [("krylov_schur", 4, {"tol": 1e-6}),
+            ("lobpcg", 4, {"tol": 1e-5, "seed": 3})]
+
+
+@pytest.mark.disk
+@pytest.mark.parametrize("site,sched,bopts", _CRASH_SCENARIOS,
+                         ids=[s[0] for s in _CRASH_SCENARIOS])
+@pytest.mark.parametrize("method,nev,kw", _METHODS,
+                         ids=[m[0] for m in _METHODS])
+def test_kill_matrix_crash_anywhere_resume_matches(disk_tmp, site, sched,
+                                                   bopts, method, nev, kw):
+    """THE headline guarantee: inject a hard CrashPoint at any I/O or
+    checkpoint boundary mid-solve, abandon the wreck, resume from the
+    surviving checkpoint into a FRESH safs root — the final spectrum
+    matches the uninterrupted solve at rtol 1e-5 and the resumed run pays
+    at most one extra restart."""
+    _n, tm = _small_graph_op()
+    def op():
+        return GraphOperator(tm, impl="ref")
+    ref = solve(op(), nev, method=method, max_iters=100, impl="ref",
+                store=_safs_store(os.path.join(disk_tmp, "ref"), **bopts),
+                **kw)
+    assert ref.converged
+
+    ck_root = os.path.join(disk_tmp, "ck")
+    plan = FaultPlan([FaultRule(site=site, kind="crash", **sched)])
+    crash_store = _safs_store(os.path.join(disk_tmp, "crash"), plan=plan,
+                              **bopts)
+    with pytest.raises((CrashPoint, WriteBehindError, SafsIOError)):
+        # the wb-thread CrashPoint surfaces as WriteBehindError at the
+        # next drain barrier (checkpoint flush); foreground sites raise
+        # CrashPoint directly
+        solve(op(), nev, method=method, max_iters=100, impl="ref",
+              store=crash_store,
+              checkpoint=CheckpointPolicy(root=ck_root, every_restarts=1),
+              **kw)
+    assert plan.fired(kind="crash"), "scheduled crash never fired"
+
+    # resume into a fresh store: the crashed root is dead hardware
+    resumed = solve(op(), nev, method=method, max_iters=100, impl="ref",
+                    store=_safs_store(os.path.join(disk_tmp, "fresh"),
+                                      **bopts),
+                    resume=ck_root, **kw)
+    assert resumed.converged
+    assert resumed.resumed_step is not None, \
+        "crash landed before any committed checkpoint — tune the schedule"
+    np.testing.assert_allclose(np.sort(resumed.eigenvalues),
+                               np.sort(ref.eigenvalues), rtol=1e-5)
+    assert resumed.n_restarts <= ref.n_restarts + 1
+
+
+@pytest.mark.disk
+def test_ckpt_save_crash_leaves_previous_checkpoint_usable(disk_tmp):
+    """The crash window between the page snapshot and the state commit:
+    the orphaned page snapshot is skipped and the previous committed
+    checkpoint resumes — directly, without a full solve around it."""
+    from repro.ckpt import checkpoint as ck
+    _n, tm = _small_graph_op()
+    ck_root = os.path.join(disk_tmp, "ck")
+    plan = FaultPlan([FaultRule(site="ckpt.save", kind="crash", at=3)])
+    st = _safs_store(os.path.join(disk_tmp, "s"), plan=plan)
+    with pytest.raises(CrashPoint):
+        solve(GraphOperator(tm, impl="ref"), 4, method="krylov_schur",
+              tol=1e-6, max_iters=100, impl="ref", store=st,
+              checkpoint=CheckpointPolicy(root=ck_root, every_restarts=1))
+    state_steps = ck.valid_steps(os.path.join(ck_root, "state"))
+    pages_steps = ck.valid_steps(os.path.join(ck_root, "pages"))
+    assert state_steps == [1, 2]        # third state commit never happened
+    assert 3 in pages_steps             # ...but its page half exists
+    resumed = solve(GraphOperator(tm, impl="ref"), 4,
+                    method="krylov_schur", tol=1e-6, max_iters=100,
+                    impl="ref",
+                    store=_safs_store(os.path.join(disk_tmp, "f")),
+                    resume=ck_root)
+    assert resumed.resumed_step == 2    # orphan at 3 skipped
+    assert resumed.converged
+
+
+# ----------------------------------------------------- coordinator hardening
+def test_coordinator_tolerates_corrupt_heartbeat(tmp_path):
+    """A node killed mid-heartbeat-write leaves a truncated/empty JSON
+    file. That is a dead member, not a coordinator crash: live_members
+    must skip it (and junk like a wrong-schema or non-numeric file)
+    without raising, and generation() must see the membership shrink."""
+    import unittest.mock as mock
+    from repro.ft import Coordinator
+    c = Coordinator(str(tmp_path), timeout=10.0)
+    c.heartbeat(0, now=100.0)
+    c.heartbeat(1, now=100.0)
+    with mock.patch("time.time", return_value=101.0):
+        g1, m1 = c.generation()
+    assert m1 == [0, 1]
+    hb = tmp_path / "hb"
+    (hb / "1.json").write_text('{"t": 1')          # truncated mid-write
+    (hb / "2.json").write_text("")                  # zero-byte create
+    (hb / "3.json").write_text('{"x": 5}')          # wrong schema
+    (hb / "nope.json").write_text('{"t": 101.0}')   # unparseable member id
+    with mock.patch("time.time", return_value=102.0):
+        g2, m2 = c.generation()
+    assert m2 == [0]                   # corrupt heartbeats are dead members
+    assert g2 == g1 + 1
