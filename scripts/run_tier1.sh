@@ -109,3 +109,24 @@ echo "$FT_OUT"
 grep -q "solve suspended at restart" <<<"$FT_OUT"
 TMPDIR="$DISK_TMP" python examples/ooc_lanczos.py --n 2000 --nnz 24000 \
     --resume "$FT_CK"
+
+# Serving smoke (PR 9): a 3-job mixed-priority queue (eigsh + lobpcg +
+# spectral-cluster) through the real CLI against ONE shared SafsBackend
+# under one arbiter-split device budget, on the bounded TMPDIR. The CLI
+# exits nonzero unless `serve.validate_report` passes: queue drained,
+# zero lost jobs, per-namespace physical byte sums reconciling EXACTLY
+# against the backend's global IOStats.
+echo "== serve smoke (repro.launch.serve --jobs, report validation) =="
+cat > "$DISK_TMP/serve_jobs.json" <<'JOBS'
+[{"job_id": "embed",   "kind": "eigsh",   "n": 600, "nnz": 6000, "nev": 4,
+  "tol": 1e-6, "max_iters": 80},
+ {"job_id": "pcg",     "kind": "lobpcg",  "n": 400, "nnz": 4000, "nev": 3,
+  "tol": 1e-5, "max_iters": 60, "priority": 1},
+ {"job_id": "cluster", "kind": "cluster", "n": 600, "k_classes": 3,
+  "nev": 3, "tol": 1e-6, "priority": 2}]
+JOBS
+TMPDIR="$DISK_TMP" python -m repro.launch.serve \
+    --jobs "$DISK_TMP/serve_jobs.json" --out "$DISK_TMP/serve_report.json" \
+    --backend safs --root "$DISK_TMP/serve_pages" \
+    --ckpt-root "$DISK_TMP/serve_ckpt" \
+    --device-budget $((8<<20)) --cache-bytes $((4<<20)) --max-concurrent 2

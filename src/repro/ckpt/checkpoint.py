@@ -182,17 +182,25 @@ def save_safs(root: str, step: int, store, *, extra: dict | None = None
     # block is pinned on device per §3.4.4) must be written through first,
     # or the snapshot would silently miss them. Residency is unchanged;
     # the entry just becomes clean-with-host-copy, like after a promote.
-    for e in getattr(store, "_entries", {}).values():
-        if e.tier == DEVICE and (e.dirty or not e.has_host):
-            backend.store(e.data_id, np.asarray(e.device_val))
-            e.has_host, e.dirty = True, False
+    sync = getattr(store, "sync_device_entries", None)
+    if sync is not None:
+        sync()
+    else:       # a bare backend passed as `store` has no device tier
+        for e in getattr(store, "_entries", {}).values():
+            if e.tier == DEVICE and (e.dirty or not e.has_host):
+                backend.store(e.data_id, np.asarray(e.device_val))
+                e.has_host, e.dirty = True, False
     backend.flush()
     final = os.path.join(root, f"step_{step:010d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
-    data_ids = backend.data_ids()
+    # the store's OWN ids, not backend.data_ids(): on a shared multi-
+    # tenant backend a session's checkpoint must not capture (or later
+    # restore over) other sessions' page files
+    own_ids = getattr(store, "data_ids", None)
+    data_ids = own_ids() if own_ids is not None else backend.data_ids()
     for data_id in data_ids:
         pf = backend.pagefile(data_id)
         for src in (pf.path, pf.path + ".meta"):

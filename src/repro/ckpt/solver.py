@@ -303,9 +303,13 @@ class SolveCheckpointer:
             mv = MultiVector(store, meta["n"], name=meta["name"],
                              group_size=meta["group_size"],
                              impl=meta["impl"])
+            resolve = getattr(store, "resolve_data_id", lambda n: n)
             for i, _w in enumerate(meta["widths"]):
                 if snap is not None:
-                    arr = _snapshot_block(snap, f"{meta['name']}/b{i}")
+                    # the snapshot's page files are keyed by the store-
+                    # qualified id (a namespaced session prefixes names)
+                    arr = _snapshot_block(snap,
+                                          resolve(f"{meta['name']}/b{i}"))
                 else:
                     arr = tree["blocks"][slot][f"b{i}"]
                 mv.append_block(jnp.asarray(arr, jnp.float32),

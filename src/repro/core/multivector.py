@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import threading
 from typing import List, Sequence
 
 import jax
@@ -64,22 +65,25 @@ class MultiVector:
     """A tall-and-skinny (n × m) matrix as a sequence of column blocks."""
 
     _counter = 0
+    _counter_lock = threading.Lock()   # concurrent sessions auto-name MVs
 
     def __init__(self, store: TieredStore | None, n: int, *,
                  name: str | None = None, group_size: int = 8,
                  readahead: int = 2, impl: kops.Impl = "auto",
                  backend="ram", backend_opts: dict | None = None):
         if name is None:
-            MultiVector._counter += 1
-            name = f"mv{MultiVector._counter}"
+            with MultiVector._counter_lock:
+                MultiVector._counter += 1
+                name = f"mv{MultiVector._counter}"
         else:
             # A resumed solve recreates MultiVectors under their
             # checkpointed auto-names; keep the counter ahead of them so
             # later auto-named instances can't collide in a shared store.
             m = re.fullmatch(r"mv(\d+)", name)
             if m:
-                MultiVector._counter = max(MultiVector._counter,
-                                           int(m.group(1)))
+                with MultiVector._counter_lock:
+                    MultiVector._counter = max(MultiVector._counter,
+                                               int(m.group(1)))
         if store is None:  # own store on the requested backend ("ram"|"safs")
             store = TieredStore(backend=backend, backend_opts=backend_opts)
         self.store = store
@@ -306,7 +310,16 @@ class MultiVector:
         out = MultiVector(self.store, self.n, group_size=self.group_size,
                           readahead=self.readahead, impl=self.impl)
         if fused and self.nblocks:
-            budget = pass_acc_bytes or COMPRESS_PASS_ACC_BYTES
+            budget = pass_acc_bytes
+            if budget is None:
+                # a session under an arbiter allotment caps the transient
+                # accumulators at its share of the device budget (the
+                # namespace facade reports it); a plain store keeps the
+                # global 1 GiB default
+                cap = getattr(self.store, "compress_acc_bytes",
+                              lambda: None)()
+                budget = (COMPRESS_PASS_ACC_BYTES if cap is None
+                          else min(COMPRESS_PASS_ACC_BYTES, cap))
             groups: List[List[int]] = [[]]
             acc = 0
             for w in new_widths:

@@ -225,8 +225,9 @@ class GraphOperator:
             if self.stream_image:   # reads counted by the store itself
                 return self._matmat_streamed(x)
             if self.store is not None:  # account the emulated image stream
-                self.store.stats.host_bytes_read += self._image_bytes
-                self.store.stats.host_reads += 1
+                # account_read keeps the parent/session dual books in sync
+                # when the store is a namespace facade
+                self.store.account_read(self._image_bytes)
             y = kops.spmm_blocks(self._blocks, self._block_cols,
                                  self._block_rows, self._row_mask, x,
                                  n_block_rows=self.tm.n_block_rows,

@@ -1,66 +1,151 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: a multi-tenant solve queue over one shared store.
 
-  python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+  python -m repro.launch.serve --jobs jobs.json --out report.json \
+      --backend safs --device-budget $((32<<20)) --max-concurrent 2
 
-Demonstrates the full serving path (prefill_with_cache → decode_step ring
-buffers) the decode_32k / long_500k dry-run cells lower at scale.
+`jobs.json` is a list of JobSpec dicts (or `{"jobs": [...]}`):
+
+  [{"job_id": "embed-a", "kind": "eigsh",  "n": 1200, "nev": 4},
+   {"job_id": "clust-b", "kind": "cluster", "n": 1200, "priority": 2},
+   {"job_id": "pcg-c",   "kind": "lobpcg", "n": 800,  "nev": 4}]
+
+All jobs share ONE store (one SAFS page cache, one write-behind queue, one
+device budget split by the arbiter); the scheduler runs them with priority
+dispatch and checkpoint-based preemption. The run emits a machine-readable
+serve report (per-job wall time, queue wait, preemption count, spectrum
+digests, per-namespace I/O reconciliation) and exits nonzero if
+`validate_report` finds any serve-invariant violation — tier-1 gates on
+this.
+
+`--demo` ignores --jobs and runs the staged preemption scenario: saturate
+the slots with low-priority background solves, wait until one is mid-
+flight, then submit a high-priority rush job — the scheduler suspends a
+background job (checkpoint → requeue), runs the rush job, and resumes.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
+import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.models import steps as S
-from repro.models import transformer as tf
+from repro.serve import JobSpec, build_service, validate_report
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _demo_specs():
+    background = [
+        JobSpec("bg-embed", kind="eigsh", n=1500, nnz=15000, nev=6,
+                priority=0, tol=1e-8, max_iters=150),
+        JobSpec("bg-lobpcg", kind="lobpcg", n=800, nnz=8000, nev=4,
+                priority=0, tol=1e-5, max_iters=60),
+        JobSpec("bg-cluster", kind="cluster", n=1200, k_classes=4, nev=4,
+                priority=1, tol=1e-6),
+    ]
+    rush = JobSpec("rush-eigsh", kind="eigsh", n=400, nnz=4000, nev=2,
+                   priority=5, tol=1e-5, max_iters=60)
+    return background, rush
 
-    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
-    if not cfg.decoder:
-        raise SystemExit(f"{cfg.name} is encoder-only — no decode path")
-    rng = np.random.default_rng(args.seed)
-    params = tf.init_model(jax.random.PRNGKey(args.seed), cfg)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
-                                       (args.batch, args.prompt_len)),
-                          jnp.int32)
-    total_len = args.prompt_len + args.gen
 
-    t0 = time.time()
-    logits, cache = tf.prefill_with_cache(params, cfg, prompts,
-                                          cache_len=total_len)
-    next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
+def _run_demo(service, *, start_timeout: float = 60.0) -> None:
+    """Submit background jobs, wait until one is actually iterating, then
+    drop the rush job on the queue so the preemption path exercises."""
+    background, rush = _demo_specs()
+    for spec in background:
+        service.submit(spec)
+    deadline = time.monotonic() + start_timeout
+    while time.monotonic() < deadline:
+        service.scheduler.tick()
+        running = service.scheduler.stats_dict()["running"]
+        if any(p["steps"] >= 1 for p in running.values()):
+            break
+        time.sleep(0.02)
+    service.submit(rush)
 
-    decode = jax.jit(S.build_decode_step(cfg))
-    out = [next_tok]
-    t0 = time.time()
-    for t in range(args.prompt_len, total_len - 1):
-        logits, cache = decode(params, cache, next_tok, jnp.int32(t))
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(next_tok)
-    jax.block_until_ready(next_tok)
-    t_decode = time.time() - t0
-    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
-    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms; "
-          f"decode {len(out)} steps in {t_decode*1e3:.1f} ms "
-          f"({t_decode/max(len(out),1)*1e3:.1f} ms/tok)")
-    print("generated token ids (first row):", gen[0].tolist())
+
+def _json_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="multi-tenant eigensolver service over one store")
+    ap.add_argument("--jobs", help="JSON file of JobSpec dicts")
+    ap.add_argument("--out", help="write the serve report here (JSON); "
+                                  "default stdout")
+    ap.add_argument("--backend", choices=("safs", "ram"), default="safs")
+    ap.add_argument("--root", help="SAFS page-file root (default: tmp)")
+    ap.add_argument("--device-budget", type=int, default=32 << 20,
+                    help="global device budget the arbiter splits [bytes]")
+    ap.add_argument("--cache-bytes", type=int, default=8 << 20,
+                    help="shared SAFS page-cache capacity [bytes]")
+    ap.add_argument("--max-concurrent", type=int, default=2)
+    ap.add_argument("--max-queued", type=int, default=64)
+    ap.add_argument("--ckpt-root",
+                    help="checkpoint root for suspend/resume (default: "
+                         "tmp; preemption needs one)")
+    ap.add_argument("--demo", action="store_true",
+                    help="run the staged preemption demo instead of --jobs")
+    args = ap.parse_args(argv)
+    if not args.demo and not args.jobs:
+        ap.error("need --jobs FILE or --demo")
+
+    ckpt_root = args.ckpt_root or tempfile.mkdtemp(prefix="serve_ckpt_")
+    service = build_service(
+        backend=args.backend, root=args.root,
+        device_budget=args.device_budget, cache_bytes=args.cache_bytes,
+        ckpt_root=ckpt_root, max_concurrent=args.max_concurrent,
+        max_queued=args.max_queued)
+    try:
+        if args.demo:
+            _run_demo(service)
+        else:
+            with open(args.jobs) as f:
+                specs = json.load(f)
+            if isinstance(specs, dict):
+                specs = specs["jobs"]
+            for d in specs:
+                service.submit(d)
+        t0 = time.monotonic()
+        service.drain()
+        report = service.report()
+        report["queue_wall_s"] = time.monotonic() - t0
+        errors = validate_report(report)
+        report["valid"] = not errors
+        report["errors"] = errors
+        text = json.dumps(report, indent=2, default=_json_default)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+        else:
+            print(text)
+        for j in report["jobs"]:
+            print(f"[{j['state']:>9s}] {j['job_id']:<12s} "
+                  f"prio={j['priority']} wall={j['wall_s']:.2f}s "
+                  f"wait={j['queue_wait_s']:.2f}s "
+                  f"preempts={j['preemptions']} "
+                  f"sha={(j['spectrum'] or {}).get('sha', '-')}",
+                  file=sys.stderr)
+        sched = report["scheduler"]
+        print(f"queue drained in {report['queue_wall_s']:.2f}s; "
+              f"{sched['completed']} jobs, "
+              f"{sched['preempt_requests']} preempt requests, "
+              f"{sched['requeues']} requeues; "
+              f"valid={report['valid']}", file=sys.stderr)
+        for e in errors:
+            print(f"INVALID: {e}", file=sys.stderr)
+        return 1 if errors else 0
+    finally:
+        service.close()
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

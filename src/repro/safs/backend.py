@@ -31,7 +31,7 @@ from typing import Dict, Iterable, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.core.tiered import IOStats
+from repro.core.tiered import IOStats, ns_of
 from repro.obs import trace
 from repro.safs.cache import PageCache, WriteBehind
 from repro.safs.faults import DEFAULT_RETRY, FaultPlan, RetryPolicy
@@ -57,28 +57,60 @@ class StorageBackend(Protocol):
     def stats_dict(self) -> dict: ...
 
 
+# ------------------------------------------------------------ ns accounting
+class _NsIO:
+    """Per-namespace physical-I/O splits for a shared backend. Every byte
+    the backend reads from / writes to the medium is attributed to the
+    owning session (`ns_of(data_id)`; un-namespaced ids bucket under
+    "_shared"), so per-namespace sums reconcile exactly against the
+    backend's global IOStats — the invariant the serve report asserts."""
+
+    SHARED = "_shared"
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats: Dict[str, IOStats] = {}
+
+    def add(self, data_id: str, **deltas: int) -> None:
+        ns = ns_of(data_id) or self.SHARED
+        with self._lock:
+            st = self._stats.get(ns)
+            if st is None:
+                st = self._stats[ns] = IOStats()
+        st.add(**deltas)
+
+    def as_dict(self) -> Dict[str, dict]:
+        with self._lock:
+            return {ns: st.as_dict() for ns, st in self._stats.items()}
+
+
 # ---------------------------------------------------------------- ram
 class RamBackend:
     """Host-DRAM slow tier — the seed emulation, byte-accounted."""
 
     def __init__(self):
         self.stats = IOStats()
+        self.ns_io = _NsIO()
         self._bufs: Dict[str, np.ndarray] = {}
 
     def store(self, data_id: str, arr: np.ndarray) -> None:
         a = np.asarray(arr)
         self._bufs[data_id] = a
-        self.stats.host_bytes_written += a.nbytes
-        self.stats.host_writes += 1
+        self.stats.add(host_bytes_written=a.nbytes, host_writes=1)
+        self.ns_io.add(data_id, host_bytes_written=a.nbytes, host_writes=1)
 
     def load(self, data_id: str) -> np.ndarray:
         a = self._bufs[data_id]
-        self.stats.host_bytes_read += a.nbytes
-        self.stats.host_reads += 1
+        self.stats.add(host_bytes_read=a.nbytes, host_reads=1)
+        self.ns_io.add(data_id, host_bytes_read=a.nbytes, host_reads=1)
         return a
 
     def delete(self, data_id: str) -> None:
         self._bufs.pop(data_id, None)
+
+    def drop_namespace(self, session_id: str) -> None:
+        # entries are deleted per-id by the store; nothing else to reclaim
+        pass
 
     def has(self, data_id: str) -> bool:
         return data_id in self._bufs
@@ -102,7 +134,7 @@ class RamBackend:
         """Merged snapshot, same shape as SafsBackend's (absent subsystems
         report None so consumers need no backend-type dispatch)."""
         return {"io": self.stats.as_dict(), "cache": None, "prefetch": None,
-                "write_behind": None}
+                "write_behind": None, "namespaces": self.ns_io.as_dict()}
 
 
 # ---------------------------------------------------------------- safs
@@ -137,6 +169,7 @@ class SafsBackend:
         self._lock = threading.RLock()
         self.cache = PageCache(cache_bytes, self.page_size, self._writeback)
         self.stats = self.cache.stats      # shared: byte-exact disk traffic
+        self.ns_io = _NsIO()               # per-session physical splits
         self.writebehind: Optional[WriteBehind] = None
         if write_behind:
             self.writebehind = WriteBehind(self._writeback_sync,
@@ -153,8 +186,7 @@ class SafsBackend:
         """on_retry sink for every retry site (page files, write-behind,
         prefetch workers): one IOStats counter, so `stats_dict()["io"]
         ["retries"]` reconciles 1:1 with the `safs.retry` trace events."""
-        with self._lock:
-            self.stats.retries += 1
+        self.stats.add(retries=1)
 
     def _open_pagefile(self, path: str, **kw) -> PageFile:
         return PageFile(path, use_mmap=self.use_mmap, faults=self.faults,
@@ -162,20 +194,37 @@ class SafsBackend:
 
     # ------------------------------------------------------------- naming
     def _path(self, data_id: str) -> str:
-        return os.path.join(self.root,
+        """Namespaced ids live one subdirectory down (`root/<sid>/`) so a
+        session's page files are enumerable and reclaimable as a unit; the
+        file NAME stays the quoted full id either way, so basename-keyed
+        consumers (checkpoint page snapshots, `_reopen`) need no namespace
+        dispatch."""
+        ns = ns_of(data_id)
+        sub = self.root
+        if ns:
+            sub = os.path.join(self.root, urllib.parse.quote(ns, safe=""))
+            os.makedirs(sub, exist_ok=True)
+        return os.path.join(sub,
                             urllib.parse.quote(data_id, safe="") + ".pages")
 
     def _unpath(self, fname: str) -> str:
         return urllib.parse.unquote(fname[:-len(".pages")])
 
     def _reopen(self) -> None:
-        """Adopt page files already in root (checkpoint-restore path)."""
-        for f in sorted(os.listdir(self.root)):
-            if f.endswith(".pages") and os.path.exists(
-                    os.path.join(self.root, f + ".meta")):
-                data_id = self._unpath(f)
-                self._files[data_id] = self._open_pagefile(
-                    os.path.join(self.root, f))
+        """Adopt page files already in root (checkpoint-restore path) —
+        root itself plus one level of per-namespace subdirs."""
+        dirs = [self.root]
+        for d in sorted(os.listdir(self.root)):
+            p = os.path.join(self.root, d)
+            if os.path.isdir(p):
+                dirs.append(p)
+        for dirpath in dirs:
+            for f in sorted(os.listdir(dirpath)):
+                if f.endswith(".pages") and os.path.exists(
+                        os.path.join(dirpath, f + ".meta")):
+                    data_id = self._unpath(f)
+                    self._files[data_id] = self._open_pagefile(
+                        os.path.join(dirpath, f))
 
     def pagefile(self, data_id: str) -> PageFile:
         return self._files[data_id]
@@ -190,7 +239,14 @@ class SafsBackend:
             pf = self._files.get(data_id)
         if pf is None:      # deleted while the batch sat in the queue
             return 0
-        return pf.write_pages(pages)
+        written = pf.write_pages(pages)
+        if written:
+            # every physical write (sync evict/flush AND async retire)
+            # funnels through here — the one choke point where the owning
+            # session's split can be advanced in lockstep with the bytes
+            self.ns_io.add(data_id, host_bytes_written=written,
+                           host_writes=1)
+        return written
 
     def _writeback(self, data_id: str, pages: Dict[int, bytes]) -> int:
         """Cache demotion sink: async via the write-behind queue when
@@ -221,6 +277,12 @@ class SafsBackend:
                 self.cache.put(data_id, i, data, dirty=False)
             return data
         return None
+
+    def _fill_read(self, data_id: str, nbytes: int) -> None:
+        """Account one physical disk read: the shared cache IOStats plus
+        the owning session's split (all three fill sites route here)."""
+        self.cache.fill_bytes_read(nbytes)
+        self.ns_io.add(data_id, host_bytes_read=nbytes, host_reads=1)
 
     def _fill(self, data_id: str) -> int:
         """Batched cache fill: every non-resident page of data_id, read as
@@ -276,7 +338,7 @@ class SafsBackend:
             self.cache.put_clean_if(
                 data_id, i, data,
                 lambda: self.writebehind.generation(data_id) == gen0)
-        self.cache.fill_bytes_read(n)
+        self._fill_read(data_id, n)
         return n
 
     # ------------------------------------------------------------- protocol
@@ -321,7 +383,7 @@ class SafsBackend:
                 pages[i] = data
         if missing:       # one coalesced vectored read for all misses
             filled = pf.read_pages_batch(missing)
-            self.cache.fill_bytes_read(sum(len(d) for d in filled.values()))
+            self._fill_read(data_id, sum(len(d) for d in filled.values()))
             for i, data in filled.items():
                 if self.writebehind is None:
                     self.cache.put(data_id, i, data, dirty=False)
@@ -354,7 +416,7 @@ class SafsBackend:
                         pages[i] = wb
                         break
                     data = pf.read_pages_batch([i])[i]
-                    self.cache.fill_bytes_read(len(data))
+                    self._fill_read(data_id, len(data))
                     if self.writebehind.generation(data_id) == gen1:
                         pages[i] = data
                         break
@@ -374,6 +436,21 @@ class SafsBackend:
     def has(self, data_id: str) -> bool:
         with self._lock:
             return data_id in self._files
+
+    def drop_namespace(self, session_id: str) -> None:
+        """Reclaim a retired session: delete any of its page files still
+        open (the store normally deletes them per-id first) and remove the
+        now-empty per-namespace subdir. The session's physical IOStats
+        split survives for post-mortem reporting."""
+        with self._lock:
+            ids = [d for d in self._files if ns_of(d) == session_id]
+        for d in ids:
+            self.delete(d)
+        try:
+            os.rmdir(os.path.join(self.root,
+                                  urllib.parse.quote(session_id, safe="")))
+        except OSError:
+            pass        # never created, or a straggler file — leave it
 
     def pin(self, data_id: str) -> None:
         if self.pin_pages:
@@ -443,6 +520,9 @@ class SafsBackend:
             "prefetch": self.prefetcher.stats(),
             "write_behind": (self.writebehind.stats_dict()
                              if self.writebehind is not None else None),
+            # per-session physical splits; after a flush/drain barrier
+            # their read/written byte sums reconcile exactly with "io"
+            "namespaces": self.ns_io.as_dict(),
         }
 
     def close(self) -> None:

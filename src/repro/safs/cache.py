@@ -110,8 +110,7 @@ class PageCache:
             for d, pages in by_file.items():
                 n = self._writer(d, pages)
                 if n:   # an async (write-behind) sink returns 0 at submit
-                    self.stats.host_bytes_written += n
-                    self.stats.host_writes += 1
+                    self.stats.add(host_bytes_written=n, host_writes=1)
 
     # ------------------------------------------------------------ lookups
     def get(self, data_id: str, page: int, *, with_dirty: bool = False):
@@ -121,10 +120,10 @@ class PageCache:
         with self._lock:
             line = self._lines.get((data_id, page))
             if line is None:
-                self.stats.cache_misses += 1
+                self.stats.add(cache_misses=1)
                 return None
             self._lines.move_to_end((data_id, page))
-            self.stats.cache_hits += 1
+            self.stats.add(cache_hits=1)
             return (line.data, line.dirty) if with_dirty else line.data
 
     def peek(self, data_id: str, page: int) -> bool:
@@ -215,11 +214,11 @@ class PageCache:
             for d, pages in by_file.items():
                 n = self._writer(d, pages)
                 if n:
-                    self.stats.host_writes += 1
+                    self.stats.add(host_writes=1)
                 total += n
                 for p in pages:
                     self._lines[(d, p)].dirty = False
-            self.stats.host_bytes_written += total
+            self.stats.add(host_bytes_written=total)
             return total
 
     def invalidate(self, data_id: str, *, drop_dirty: bool = False) -> None:
@@ -231,17 +230,14 @@ class PageCache:
                 if line.dirty and not drop_dirty:
                     n = self._writer(data_id, {key[1]: line.data})
                     if n:
-                        self.stats.host_bytes_written += n
-                        self.stats.host_writes += 1
+                        self.stats.add(host_bytes_written=n, host_writes=1)
                 del self._lines[key]
                 self._dec_per_file(data_id)
             self._pinned.discard(data_id)
 
     def fill_bytes_read(self, n: int) -> None:
         """Account a disk read that filled this cache (backend helper)."""
-        with self._lock:
-            self.stats.host_bytes_read += n
-            self.stats.host_reads += 1
+        self.stats.add(host_bytes_read=n, host_reads=1)
 
 
 # ---------------------------------------------------------------------------
@@ -348,8 +344,8 @@ class WriteBehind:
                     self.bytes_retired += written
                     self.batches_retired += 1
                     if self._stats is not None and written:
-                        self._stats.host_bytes_written += written
-                        self._stats.host_writes += 1
+                        self._stats.add(host_bytes_written=written,
+                                        host_writes=1)
                 else:
                     if self._error is None:
                         self._error, self._error_id = err, data_id

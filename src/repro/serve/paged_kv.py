@@ -35,13 +35,40 @@ class PagedConfig:
 
 
 class PagedKVCache:
-    """Per-sequence paged KV storage over a TieredStore."""
+    """Per-sequence paged KV storage over a TieredStore.
 
-    def __init__(self, cfg: PagedConfig, store: TieredStore | None = None):
+    `session_id` routes every page name through `store.namespace(...)`, so
+    a KV-spill workload coexists with solver sessions on ONE shared store:
+    its pages live under its own key prefix, its device bytes count against
+    its own arbiter allotment, and session end (`close()`) reclaims them
+    without touching the solvers' blocks. Omitted (the default), the cache
+    uses the store directly — the standalone demo path is byte-identical
+    to before namespaces existed.
+    """
+
+    def __init__(self, cfg: PagedConfig, store: TieredStore | None = None,
+                 *, session_id: str | None = None):
         self.cfg = cfg
-        self.store = store or TieredStore()
+        store = store or TieredStore()
+        self.session_id = session_id
+        if session_id is not None:
+            ns = getattr(store, "namespace", None)
+            if ns is None:
+                raise TypeError(f"store {type(store).__name__!r} has no "
+                                "namespace() — cannot scope session "
+                                f"{session_id!r}")
+            store = ns(session_id)
+        self.store = store
         self._tables: dict[int, list[str]] = {}   # seq id -> page names
         self._fill: dict[int, int] = {}           # tokens written
+
+    def close(self) -> None:
+        """Retire a namespaced cache (drops its pages from the shared
+        store); a no-op for the un-namespaced standalone form."""
+        if self.session_id is not None:
+            self.store.close()
+        self._tables.clear()
+        self._fill.clear()
 
     def _page_shape(self):
         c = self.cfg

@@ -1,0 +1,143 @@
+"""SolveScheduler — admission-controlled priority queue over one store.
+
+The multi-tenant heart of the serving layer: N submitted `SolveSession`s,
+up to `max_concurrent` running at once on worker threads, every one
+confined to its own store namespace with the device allotment the
+`BudgetArbiter` granted at admission. The dispatcher loop (`drain`, on the
+caller's thread) does three things per tick:
+
+  reap     finished workers — DONE/FAILED release the namespace and the
+           arbiter share; SUSPENDED additionally *requeues* the session,
+           which will resume from its committed checkpoint;
+  preempt  when a strictly higher-priority job is waiting and no slot is
+           free, raise the lowest-priority running preemptible session's
+           `PreemptFlag` — it checkpoints at its next restart boundary and
+           exits `SUSPENDED`, so short high-priority jobs jump the queue
+           without losing the long job's progress;
+  fill     pop pending jobs in (-priority, submit-order) order into free
+           slots: `arbiter.admit` first (shares shrink for incumbents
+           immediately), then the worker thread.
+
+Admission control is a hard queue bound (`max_queued`), not a soft hint —
+a serve front end that accepts unboundedly is just an OOM with extra
+steps.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve.session import SUSPENDED, SolveSession
+
+
+class AdmissionError(RuntimeError):
+    """The queue is full — the caller must back off and resubmit."""
+
+
+class SolveScheduler:
+    """Priority scheduler for SolveSessions over one shared TieredStore."""
+
+    def __init__(self, store, arbiter, *, max_concurrent: int = 2,
+                 max_queued: int = 64, poll_interval: float = 0.01):
+        if max_concurrent < 1:
+            raise ValueError("max_concurrent must be >= 1")
+        self.store = store
+        self.arbiter = arbiter
+        self.max_concurrent = int(max_concurrent)
+        self.max_queued = int(max_queued)
+        self.poll_interval = float(poll_interval)
+        # heap of (-priority, seq, session): highest priority first,
+        # FIFO within a priority level
+        self._pending: List[Tuple[int, int, SolveSession]] = []
+        self._running: Dict[str, Tuple[SolveSession, threading.Thread]] = {}
+        self.completed: List[SolveSession] = []
+        self._seq = 0
+        self.preempt_requests = 0
+        self.requeues = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, session: SolveSession) -> None:
+        if len(self._pending) + len(self._running) >= self.max_queued:
+            raise AdmissionError(
+                f"queue full ({self.max_queued} jobs in flight)")
+        self._enqueue(session)
+
+    def _enqueue(self, session: SolveSession) -> None:
+        session.mark_queued()
+        heapq.heappush(self._pending,
+                       (-session.spec.priority, self._seq, session))
+        self._seq += 1
+
+    # ---------------------------------------------------------- dispatch
+    def drain(self) -> List[SolveSession]:
+        """Run the dispatcher loop until queue and slots are empty;
+        returns every session in completion order."""
+        while self._pending or self._running:
+            self.tick()
+            time.sleep(self.poll_interval)
+        return self.completed
+
+    def tick(self) -> None:
+        """One dispatcher step: reap, maybe preempt, fill. Exposed so
+        tests can single-step scheduling decisions deterministically."""
+        self._reap()
+        self._maybe_preempt()
+        self._fill()
+
+    def _reap(self) -> None:
+        for sid in list(self._running):
+            session, thread = self._running[sid]
+            if thread.is_alive():
+                continue
+            thread.join()
+            del self._running[sid]
+            # Namespace teardown in EVERY terminal state: a suspended
+            # session's live blocks are dead weight — the committed page
+            # snapshot in its checkpoint root is the only state that
+            # survives, and resume rebuilds into a fresh namespace.
+            self.store.drop_namespace(sid)
+            self.arbiter.release(sid)
+            if session.state == SUSPENDED:
+                self.requeues += 1
+                self._enqueue(session)
+            else:
+                self.completed.append(session)
+
+    def _maybe_preempt(self) -> None:
+        if not self._pending or len(self._running) < self.max_concurrent:
+            return
+        head_priority = -self._pending[0][0]
+        victims = [s for s, _ in self._running.values()
+                   if s.can_preempt and s.spec.priority < head_priority]
+        if not victims:
+            return
+        victim = min(victims, key=lambda s: s.spec.priority)
+        victim.guard.request()
+        self.preempt_requests += 1
+
+    def _fill(self) -> None:
+        while self._pending and len(self._running) < self.max_concurrent:
+            _, _, session = heapq.heappop(self._pending)
+            session.mark_dequeued()
+            sid = session.spec.job_id
+            self.arbiter.admit(sid, session.spec.priority)
+            thread = threading.Thread(target=session.run,
+                                      name=f"solve-{sid}", daemon=True)
+            self._running[sid] = (session, thread)
+            thread.start()
+
+    # ------------------------------------------------------------ surface
+    def stats_dict(self) -> dict:
+        """Live gauges for obs.metrics: queue depth, per-job progress,
+        preemption counters."""
+        return {
+            "pending": len(self._pending),
+            "running": {sid: s.progress()
+                        for sid, (s, _) in self._running.items()},
+            "completed": len(self.completed),
+            "max_concurrent": self.max_concurrent,
+            "preempt_requests": self.preempt_requests,
+            "requeues": self.requeues,
+        }

@@ -234,7 +234,8 @@ def test_metrics_registry_isolation():
 def test_ram_backend_stats_dict_shape():
     store = TieredStore()
     snap = store.backend.stats_dict()
-    assert set(snap) == {"io", "cache", "prefetch", "write_behind"}
+    assert set(snap) == {"io", "cache", "prefetch", "write_behind",
+                         "namespaces"}
     assert snap["cache"] is None and snap["prefetch"] is None
 
 
@@ -392,7 +393,8 @@ def test_traced_solve_safs_full_timeline(small_graph, disk_tmp, tmp_path):
                 group_size=2, store=store, trace=path)
     snap = store.backend.stats_dict()
     store.close()
-    assert set(snap) == {"io", "cache", "prefetch", "write_behind"}
+    assert set(snap) == {"io", "cache", "prefetch", "write_behind",
+                         "namespaces"}
     assert snap["prefetch"]["files_prefetched"] > 0
     assert snap["write_behind"]["pages_retired"] > 0
 
