@@ -138,6 +138,48 @@ def _read_throughput(root, page_size, *, nfiles, file_kb):
     }
 
 
+def _scrub_cost(root, *, nfiles, file_kb):
+    """verify-on-read overhead (batched reads, CRC on vs off) and full
+    scrub-pass throughput over a freshly written store."""
+    from repro.safs import Scrubber, SafsBackend
+    os.makedirs(root, exist_ok=True)
+    for f in range(nfiles):
+        arr = np.random.default_rng(100 + f).standard_normal(
+            file_kb * 256).astype(np.float32)
+        pf = PageFile(os.path.join(root, f"s{f}.pages"),
+                      shape=arr.shape, dtype="float32")
+        pf.write_pages(pf.split(arr))
+        pf.close()
+    paths = [os.path.join(root, f"s{f}.pages") for f in range(nfiles)]
+
+    def read_all(verify):
+        pfs = [PageFile(p, verify=verify) for p in paths]
+        t0 = time.perf_counter()
+        for pf in pfs:
+            pf.read_pages_batch(range(pf.n_pages))
+        dt = time.perf_counter() - t0
+        n = sum(pf.n_pages for pf in pfs)
+        for pf in pfs:
+            pf.close()
+        return n, dt
+
+    n_pages, t_raw = read_all(False)
+    _, t_verified = read_all(True)
+
+    backend = SafsBackend(root, enable_prefetch=True, write_behind=False)
+    scrub = Scrubber(backend, use_pool=True)
+    summary = scrub.run_once()
+    backend.close()
+    return {
+        "n_pages": n_pages,
+        "read_pages_per_s_raw": n_pages / max(t_raw, 1e-9),
+        "read_pages_per_s_verified": n_pages / max(t_verified, 1e-9),
+        "verify_overhead": t_verified / max(t_raw, 1e-9) - 1.0,
+        "scrub_pages_per_s": summary["pages"] / max(summary["seconds"],
+                                                    1e-9),
+    }
+
+
 # ------------------------------------------------------------- ladders
 def collect(*, smoke: bool = False) -> dict:
     """Run every ladder; returns the BENCH_safs.json metrics dict."""
@@ -232,6 +274,13 @@ def collect(*, smoke: bool = False) -> dict:
             "pinned_over_lru": pinned / max(lru_only, 1e-9),
             "compress_pass_hit_rate": compress_rate,
         }
+
+        # integrity tax (PR 10): what verify-on-read costs the batched
+        # engine, and how fast a full scrub pass covers the store — the
+        # number that sets a sane Scrubber pace for a given device.
+        out["safs_integrity"] = _scrub_cost(
+            os.path.join(root, "integrity"), nfiles=nfiles,
+            file_kb=file_kb)
     finally:
         shutil.rmtree(root, ignore_errors=True)
     return out
@@ -288,6 +337,10 @@ def main():
     print(f"reorth page hit rate: {sc['page_hit_rate']:.3f} pinned vs "
           f"{sc['lru_only_hit_rate']:.3f} LRU-only "
           f"({sc['pinned_over_lru']:.1f}x)")
+    ig = metrics["safs_integrity"]
+    print(f"integrity: verify-on-read overhead "
+          f"{100 * ig['verify_overhead']:.1f}%, scrub pass "
+          f"{ig['scrub_pages_per_s']:,.0f} pages/s")
 
 
 if __name__ == "__main__":

@@ -130,3 +130,52 @@ TMPDIR="$DISK_TMP" python -m repro.launch.serve \
     --backend safs --root "$DISK_TMP/serve_pages" \
     --ckpt-root "$DISK_TMP/serve_ckpt" \
     --device-budget $((8<<20)) --cache-bytes $((4<<20)) --max-concurrent 2
+
+# Integrity smoke (PR 10): flip real bits and prove the stack heals.
+# 1. suspend a checkpointed safs solve mid-flight (store now at rest,
+#    its state == the newest committed snapshot — the regime where
+#    page-level repair is sound);
+# 2. corrupt one page of the live store → the scrub CLI detects it and
+#    repairs it from the newest *verified* snapshot (exit 0), and a
+#    second scrub pass proves the store verifies clean;
+# 3. corrupt the newest checkpoint snapshot itself → the resume falls
+#    back to the next older verified step, and the example's built-in
+#    ram-parity assert (rtol 1e-5) gates the resumed spectrum;
+# 4. the resume trace must pass `repro.obs.report --validate`, which now
+#    also reconciles the integrity counters against safs.corrupt /
+#    safs.scrub / safs.repair trace events.
+echo "== integrity smoke (bitflip -> scrub/repair -> fallback resume) =="
+IG_ROOT="$DISK_TMP/integ_root"
+IG_CK="$DISK_TMP/integ_ck"
+IG_OUT="$(TMPDIR="$DISK_TMP" python examples/ooc_lanczos.py --n 2000 \
+    --nnz 24000 --root "$IG_ROOT" --checkpoint "$IG_CK" --preempt-after 2)"
+grep -q "solve suspended at restart" <<<"$IG_OUT"
+python - "$IG_ROOT/pages" "$IG_CK/pages" <<'EOF'
+import glob, os, sys
+from repro.safs import flip_bit
+# the victim must be a file the checkpoint snapshot covers (the live
+# root also holds matrix-image chunks no snapshot carries)
+newest = sorted(glob.glob(sys.argv[2] + "/step_*"))[-1]
+covered = {os.path.basename(p)
+           for p in glob.glob(os.path.join(newest, "*.pages"))}
+victim = sorted(p for p in glob.glob(sys.argv[1] + "/*.pages")
+                if os.path.basename(p) in covered)[0]
+flip_bit(victim, 0)
+print(f"flipped one bit in live store page: {victim}")
+EOF
+TMPDIR="$DISK_TMP" python -m repro.safs.scrub "$IG_ROOT/pages" \
+    --repair-from "$IG_CK/pages"
+TMPDIR="$DISK_TMP" python -m repro.safs.scrub "$IG_ROOT/pages"
+python - "$IG_CK/pages" <<'EOF'
+import glob, os, sys
+from repro.safs import flip_bit
+snaps = sorted(glob.glob(sys.argv[1] + "/step_*"))
+victim = sorted(glob.glob(os.path.join(snaps[-1], "*.pages")))[0]
+flip_bit(victim, 0)
+print(f"corrupted newest snapshot: {victim}")
+EOF
+TMPDIR="$DISK_TMP" python examples/ooc_lanczos.py --n 2000 --nnz 24000 \
+    --resume "$IG_CK" --trace "$DISK_TMP/integ_trace.jsonl"
+# the corrupt newest snapshot must have been *skipped*, not restored
+grep -q "ckpt.corrupt_snapshot" "$DISK_TMP/integ_trace.jsonl"
+python -m repro.obs.report "$DISK_TMP/integ_trace.jsonl" --validate

@@ -16,11 +16,13 @@ Fault-tolerance contract (DESIGN.md §6):
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 import time
+import urllib.parse
 from typing import Any
 
 import jax
@@ -28,6 +30,20 @@ import jax.numpy as jnp
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+
+class CorruptSnapshotError(RuntimeError):
+    """A committed page snapshot failed content verification (bit-rot or
+    a torn copy in the checkpoint itself). The resume path treats it like
+    an orphan: fall back to the next-older valid step."""
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten_with_paths(tree: Any):
@@ -166,11 +182,15 @@ def save_safs(root: str, step: int, store, *, extra: dict | None = None
     The subspace already lives on disk as SAFS page files (§3.4.1), so the
     checkpoint is a flush (journaled write-back of dirty pages) plus a
     kernel-side file copy (`shutil.copyfile` → copy_file_range/sendfile on
-    Linux) of each page file and its sidecar into the checkpoint dir. The
-    arrays are never assembled in host memory. Same atomic-manifest
-    contract as `save` (tmp dir, manifest last, atomic rename); use a
-    separate checkpoint root from tree checkpoints — `restore` and
-    `restore_safs` are not interchangeable.
+    Linux) of each page file and its sidecars (shape metadata AND the
+    checksum block — the snapshot stays self-verifying) into the
+    checkpoint dir. The manifest additionally records a sha256 content
+    hash per page file, so `verify_safs_snapshot` can prove a snapshot
+    clean before it is trusted as a resume/repair source. The arrays are
+    never assembled in host memory. Same atomic-manifest contract as
+    `save` (tmp dir, manifest last, atomic rename); use a separate
+    checkpoint root from tree checkpoints — `restore` and `restore_safs`
+    are not interchangeable.
     """
     from repro.core.tiered import DEVICE
     from repro.safs.backend import SafsBackend
@@ -201,12 +221,20 @@ def save_safs(root: str, step: int, store, *, extra: dict | None = None
     # restore over) other sessions' page files
     own_ids = getattr(store, "data_ids", None)
     data_ids = own_ids() if own_ids is not None else backend.data_ids()
+    hashes = {}
     for data_id in data_ids:
         pf = backend.pagefile(data_id)
-        for src in (pf.path, pf.path + ".meta"):
-            shutil.copyfile(src, os.path.join(tmp, os.path.basename(src)))
+        for src in (pf.path, pf.path + ".meta", pf.path + ".sums"):
+            if os.path.exists(src):
+                shutil.copyfile(src,
+                                os.path.join(tmp, os.path.basename(src)))
+        # content hash of the COPY — what a later resume must verify
+        # before trusting this snapshot as a repair source
+        hashes[data_id] = _sha256_file(
+            os.path.join(tmp, os.path.basename(pf.path)))
     manifest = {"step": step, "kind": "safs_pages", "data_ids": data_ids,
-                "page_size": backend.page_size, "extra": extra or {}}
+                "page_size": backend.page_size, "hashes": hashes,
+                "extra": extra or {}}
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -215,22 +243,56 @@ def save_safs(root: str, step: int, store, *, extra: dict | None = None
     return final
 
 
-def restore_safs(root: str, step: int, dest_root: str):
+def verify_safs_snapshot(path: str) -> list[str]:
+    """Content-verify a committed page snapshot against its manifest:
+    every data_id's page file present (with metadata) and matching its
+    recorded sha256. Returns the list of problems (empty == verified).
+    Legacy manifests without hashes verify on presence alone."""
+    problems: list[str] = []
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"unreadable manifest: {e}"]
+    if manifest.get("kind") != "safs_pages":
+        return [f"not a safs page snapshot: {path}"]
+    hashes = manifest.get("hashes") or {}
+    for data_id in manifest.get("data_ids", []):
+        fp = os.path.join(path,
+                          urllib.parse.quote(data_id, safe="") + ".pages")
+        if not (os.path.exists(fp) and os.path.exists(fp + ".meta")):
+            problems.append(f"missing page file for {data_id!r}")
+            continue
+        want = hashes.get(data_id)
+        if want is not None and _sha256_file(fp) != want:
+            problems.append(f"content hash mismatch for {data_id!r}")
+    return problems
+
+
+def restore_safs(root: str, step: int, dest_root: str, *,
+                 verify: bool = True):
     """Rehydrate a page snapshot into a fresh SafsBackend at dest_root.
 
     Copies the page files back (kernel-side) and reopens them; returns
     (backend, extra). Pages are faulted in lazily through the page cache on
-    first access — restore itself still does no RAM round-trip.
+    first access — restore itself still does no RAM round-trip. With
+    `verify` (default) the snapshot's content hashes are checked first and
+    a mismatch raises `CorruptSnapshotError` instead of rehydrating rot.
     """
     from repro.safs.backend import SafsBackend
     path = os.path.join(root, f"step_{step:010d}")
+    if verify:
+        problems = verify_safs_snapshot(path)
+        if problems:
+            raise CorruptSnapshotError("; ".join(problems))
     with open(os.path.join(path, MANIFEST)) as f:
         manifest = json.load(f)
     if manifest.get("kind") != "safs_pages":
         raise ValueError(f"not a safs page snapshot: {path}")
     os.makedirs(dest_root, exist_ok=True)
     for fname in os.listdir(path):
-        if fname.endswith(".pages") or fname.endswith(".pages.meta"):
+        if (fname.endswith(".pages") or fname.endswith(".pages.meta")
+                or fname.endswith(".pages.sums")):
             shutil.copyfile(os.path.join(path, fname),
                             os.path.join(dest_root, fname))
     backend = SafsBackend(dest_root, page_size=manifest["page_size"])

@@ -126,16 +126,20 @@ def _load_tree(root: str, step: int) -> tuple:
     return tree, manifest["extra"]
 
 
-def _snapshot_block(snap_dir: str, data_id: str) -> np.ndarray:
+def _snapshot_block(snap_dir: str, data_id: str,
+                    integrity=None) -> np.ndarray:
     """Assemble one subspace block straight out of a page snapshot's
     PageFile (lazy page reads — the block never existed in the snapshot
-    as a contiguous array)."""
+    as a contiguous array). Reads verify against the snapshot's copied
+    checksum block: a rotten snapshot page raises CorruptPageError here
+    rather than resuming garbage (normally pre-empted by the manifest
+    hash check in `load`, which falls back to an older step)."""
     import urllib.parse
 
     from repro.safs.pagefile import PageFile
     path = os.path.join(snap_dir,
                         urllib.parse.quote(data_id, safe="") + ".pages")
-    pf = PageFile(path)
+    pf = PageFile(path, integrity=integrity)
     try:
         return pf.assemble(pf.read_pages_batch(pf.page_indices()))
     finally:
@@ -284,6 +288,14 @@ class SolveCheckpointer:
                 snap = os.path.join(_pages_root(root), f"step_{step:010d}")
                 if not os.path.exists(os.path.join(snap, ck.MANIFEST)):
                     continue    # orphan: state committed, pages gc'd/lost
+                problems = ck.verify_safs_snapshot(snap)
+                if problems:
+                    # corrupt/torn snapshot: NEVER a resume source — fall
+                    # back to the next-older verified step, same as an
+                    # orphan (the solve re-pays at most those restarts)
+                    trace.event("ckpt.corrupt_snapshot", step=step,
+                                problems=list(problems))
+                    continue
             mvs = self._rebuild_mvs(store, extra["mv_meta"], tree, snap)
             trace.event("ckpt.resume", step=step, method=self.method,
                         backend=extra.get("backend"))
@@ -308,8 +320,10 @@ class SolveCheckpointer:
                 if snap is not None:
                     # the snapshot's page files are keyed by the store-
                     # qualified id (a namespaced session prefixes names)
-                    arr = _snapshot_block(snap,
-                                          resolve(f"{meta['name']}/b{i}"))
+                    arr = _snapshot_block(
+                        snap, resolve(f"{meta['name']}/b{i}"),
+                        integrity=getattr(getattr(store, "backend", None),
+                                          "integrity", None))
                 else:
                     arr = tree["blocks"][slot][f"b{i}"]
                 mv.append_block(jnp.asarray(arr, jnp.float32),

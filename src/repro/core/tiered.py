@@ -90,6 +90,8 @@ class IOStats:
     passes: int = 0                # streamed whole-subspace reads (§3.4.3)
     pass_bytes_read: int = 0       # host bytes read INSIDE those passes
     retries: int = 0               # transient-I/O retries absorbed (safs)
+    retry_sleep_ms: float = 0.0    # cumulative backoff slept in retries
+    #                                (bounded per op by max_total_sleep)
 
     def __post_init__(self):
         # not a dataclass field: asdict/eq stay counter-only, and every

@@ -92,6 +92,18 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-root",
                     help="checkpoint root for suspend/resume (default: "
                          "tmp; preemption needs one)")
+    ap.add_argument("--job-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="default per-job wall-clock deadline; the "
+                         "watchdog suspends (then abandons) jobs past it")
+    ap.add_argument("--deadline-grace", type=float, default=2.0,
+                    metavar="SECONDS",
+                    help="extra time a deadline-expired worker gets to "
+                         "checkpoint-suspend before abandonment")
+    ap.add_argument("--orphan-grace", type=float, default=3600.0,
+                    metavar="SECONDS",
+                    help="age gate for the startup orphan-namespace GC "
+                         "(negative disables the sweep)")
     ap.add_argument("--demo", action="store_true",
                     help="run the staged preemption demo instead of --jobs")
     args = ap.parse_args(argv)
@@ -103,7 +115,11 @@ def main(argv=None) -> int:
         backend=args.backend, root=args.root,
         device_budget=args.device_budget, cache_bytes=args.cache_bytes,
         ckpt_root=ckpt_root, max_concurrent=args.max_concurrent,
-        max_queued=args.max_queued)
+        max_queued=args.max_queued,
+        default_deadline_s=args.job_deadline,
+        deadline_grace_s=args.deadline_grace,
+        orphan_grace_s=(None if args.orphan_grace < 0
+                        else args.orphan_grace))
     try:
         if args.demo:
             _run_demo(service)
@@ -138,8 +154,20 @@ def main(argv=None) -> int:
         print(f"queue drained in {report['queue_wall_s']:.2f}s; "
               f"{sched['completed']} jobs, "
               f"{sched['preempt_requests']} preempt requests, "
-              f"{sched['requeues']} requeues; "
+              f"{sched['requeues']} requeues, "
+              f"{sched.get('timeouts', 0)} deadline timeouts, "
+              f"{sched.get('abandoned', 0)} abandoned; "
               f"valid={report['valid']}", file=sys.stderr)
+        integ = (report.get("backend") or {}).get("integrity")
+        if integ:
+            print(f"integrity: {integ['pages_verified']} pages verified, "
+                  f"{integ['crc_failures']} corrupt "
+                  f"({integ['quarantined']} quarantined), "
+                  f"{integ['pages_repaired']} repaired, "
+                  f"{integ['scrub_passes']} scrub passes", file=sys.stderr)
+        if report.get("orphans_swept"):
+            print(f"orphan namespaces swept at startup: "
+                  f"{', '.join(report['orphans_swept'])}", file=sys.stderr)
         for e in errors:
             print(f"INVALID: {e}", file=sys.stderr)
         return 1 if errors else 0

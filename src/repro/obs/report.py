@@ -18,9 +18,16 @@ Sections:
                     counters are two independent accountants of the same
                     traffic and must agree to the byte.
 
+  integrity         checksum-verification counters vs their trace
+                    events: `crc_failures` must equal the number of
+                    `safs.corrupt` events, `scrub_passes` the number of
+                    `safs.scrub` events and `pages_repaired` the number
+                    of `safs.repair` events — every detection, pass and
+                    repair is both counted and announced, exactly once.
+
 `--validate` exits non-zero on: schema mismatch, zero spans, an overlap
 fraction outside [0, 1], or (on a lossless trace with a metrics record) a
-failed byte reconciliation.
+failed byte or integrity reconciliation.
 """
 from __future__ import annotations
 
@@ -113,6 +120,38 @@ def reconcile(records: List[dict]) -> Optional[dict]:
     }
 
 
+def integrity_reconcile(records: List[dict]) -> Optional[dict]:
+    """Integrity counters vs corruption/scrub/repair trace events. Returns
+    None when no metrics record carries a backend integrity block (ram
+    backend, or a store without verify-on-read)."""
+    integ = None
+    for m in metrics_records(records):
+        data = m.get("data", {})
+        # prefer the absolute end snapshot: events count from process
+        # start, and the backend is created inside the traced process
+        for key in ("end", "delta"):
+            cand = ((data.get(key) or {}).get("backend")
+                    or {}).get("integrity")
+            if isinstance(cand, dict):
+                integ = cand
+                break
+    if integ is None:
+        return None
+    summ = summary_record(records)
+    pairs = (("crc_failures", "safs.corrupt"),
+             ("scrub_passes", "safs.scrub"),
+             ("pages_repaired", "safs.repair"))
+    out = {"lossless": summ is None or summ.get("dropped", 0) == 0}
+    exact = True
+    for counter, ev in pairs:
+        got, want = integ.get(counter, 0), len(events(records, ev))
+        out[counter] = got
+        out[ev] = want
+        exact = exact and got == want
+    out["exact"] = exact
+    return out
+
+
 # ------------------------------------------------------------- validation
 def validate(records: List[dict]) -> List[str]:
     """Schema/consistency problems, empty when the trace is good."""
@@ -141,6 +180,16 @@ def validate(records: List[dict]) -> List[str]:
             f"{rec['span_pass_bytes']} B vs IOStats "
             f"{rec['iostats_passes']} passes / "
             f"{rec['iostats_pass_bytes_read']} B")
+    integ = integrity_reconcile(records)
+    if integ is not None and integ["lossless"] and not integ["exact"]:
+        problems.append(
+            "integrity accounting mismatch: counters "
+            f"crc_failures={integ['crc_failures']}/"
+            f"scrub_passes={integ['scrub_passes']}/"
+            f"pages_repaired={integ['pages_repaired']} vs events "
+            f"safs.corrupt={integ['safs.corrupt']}/"
+            f"safs.scrub={integ['safs.scrub']}/"
+            f"safs.repair={integ['safs.repair']}")
     return problems
 
 
@@ -231,6 +280,20 @@ def render(records: List[dict]) -> str:
             f"{_fmt_bytes(rec['iostats_pass_bytes_read'] or 0)} → "
             + ("EXACT" if rec["exact"] else
                ("MISMATCH" if rec["lossless"] else "lossy trace, skipped")))
+
+    integ = integrity_reconcile(records)
+    lines.append("")
+    lines.append("-- integrity (counters vs trace events) --")
+    if integ is None:
+        lines.append("no integrity metrics in trace")
+    else:
+        lines.append(
+            f"corrupt {integ['crc_failures']}/{integ['safs.corrupt']} · "
+            f"scrub passes {integ['scrub_passes']}/{integ['safs.scrub']} · "
+            f"repairs {integ['pages_repaired']}/{integ['safs.repair']} → "
+            + ("EXACT" if integ["exact"] else
+               ("MISMATCH" if integ["lossless"] else
+                "lossy trace, skipped")))
     return "\n".join(lines)
 
 

@@ -3,20 +3,26 @@
 See README.md in this directory for the paper mapping.
 """
 from repro.safs.pagefile import (PAGE_SIZE, CrashPoint, PageFile,
-                                 coalesce_runs)
+                                 coalesce_runs, flip_bit, page_crc)
 from repro.safs.cache import PageCache, WriteBehind, WriteBehindError
 from repro.safs.prefetch import PrefetchError, Prefetcher
-from repro.safs.faults import (DEFAULT_RETRY, FaultPlan, FaultRule,
-                               RetryPolicy, SafsIOError, TransientIOError,
+from repro.safs.faults import (DEFAULT_RETRY, CorruptPageError, FaultPlan,
+                               FaultRule, IntegrityCounters, RetryPolicy,
+                               SafsIOError, TransientIOError,
                                is_transient, with_retries)
 from repro.safs.backend import (RamBackend, SafsBackend, StorageBackend,
                                 make_backend)
+from repro.safs.scrub import (Scrubber, newest_verified_step,
+                              repair_from_checkpoint)
 
 __all__ = [
     "PAGE_SIZE", "CrashPoint", "PageFile", "coalesce_runs",
+    "flip_bit", "page_crc",
     "PageCache", "WriteBehind", "WriteBehindError",
     "PrefetchError", "Prefetcher",
-    "DEFAULT_RETRY", "FaultPlan", "FaultRule", "RetryPolicy",
+    "DEFAULT_RETRY", "CorruptPageError", "FaultPlan", "FaultRule",
+    "IntegrityCounters", "RetryPolicy",
     "SafsIOError", "TransientIOError", "is_transient", "with_retries",
     "RamBackend", "SafsBackend", "StorageBackend", "make_backend",
+    "Scrubber", "newest_verified_step", "repair_from_checkpoint",
 ]

@@ -34,7 +34,8 @@ import numpy as np
 from repro.core.tiered import IOStats, ns_of
 from repro.obs import trace
 from repro.safs.cache import PageCache, WriteBehind
-from repro.safs.faults import DEFAULT_RETRY, FaultPlan, RetryPolicy
+from repro.safs.faults import (DEFAULT_RETRY, FaultPlan, IntegrityCounters,
+                               RetryPolicy)
 from repro.safs.pagefile import PAGE_SIZE, PageFile
 from repro.safs.prefetch import PrefetchError, Prefetcher
 
@@ -134,7 +135,8 @@ class RamBackend:
         """Merged snapshot, same shape as SafsBackend's (absent subsystems
         report None so consumers need no backend-type dispatch)."""
         return {"io": self.stats.as_dict(), "cache": None, "prefetch": None,
-                "write_behind": None, "namespaces": self.ns_io.as_dict()}
+                "write_behind": None, "integrity": None,
+                "namespaces": self.ns_io.as_dict()}
 
 
 # ---------------------------------------------------------------- safs
@@ -148,11 +150,18 @@ class SafsBackend:
                  readahead_depth: int = 8, write_behind: bool = True,
                  wb_max_pages: int = 4096, pin_pages: bool = True,
                  faults: Optional[FaultPlan] = None,
-                 retry: Optional[RetryPolicy] = DEFAULT_RETRY):
+                 retry: Optional[RetryPolicy] = DEFAULT_RETRY,
+                 verify_reads: bool = True):
         self.root = root
         self.page_size = int(page_size)
         self.use_mmap = use_mmap
         self.enable_prefetch = enable_prefetch
+        # verify_reads: CRC-check every page served off the medium against
+        # its sidecar checksum block; detections quarantine the page and
+        # raise CorruptPageError instead of serving rotten bytes upward
+        self.verify_reads = bool(verify_reads)
+        self.integrity = IntegrityCounters()
+        self._quarantine: set = set()          # {(data_id, page)}
         # pin_pages=False degrades the cache to plain LRU (no §3.4.4
         # most-recent-matrix pin) — the measured baseline in bench_safs
         self.pin_pages = bool(pin_pages)
@@ -185,12 +194,28 @@ class SafsBackend:
     def _count_retry(self, **kw) -> None:
         """on_retry sink for every retry site (page files, write-behind,
         prefetch workers): one IOStats counter, so `stats_dict()["io"]
-        ["retries"]` reconciles 1:1 with the `safs.retry` trace events."""
-        self.stats.add(retries=1)
+        ["retries"]` reconciles 1:1 with the `safs.retry` trace events;
+        `retry_sleep_ms` accumulates the backoff actually slept (bounded
+        per operation by RetryPolicy.max_total_sleep)."""
+        self.stats.add(retries=1,
+                       retry_sleep_ms=float(kw.get("slept_ms", 0.0)))
 
-    def _open_pagefile(self, path: str, **kw) -> PageFile:
+    def _note_corrupt(self, data_id: str, **kw) -> None:
+        """on_corrupt sink: quarantine the page (the PageFile already
+        counted crc_failures and emitted the safs.corrupt event)."""
+        with self._lock:
+            self._quarantine.add((data_id, int(kw.get("page") or 0)))
+
+    def _open_pagefile(self, path: str, data_id: Optional[str] = None,
+                       **kw) -> PageFile:
+        if data_id is None:
+            data_id = self._unpath(os.path.basename(path))
         return PageFile(path, use_mmap=self.use_mmap, faults=self.faults,
-                        retry=self.retry, on_retry=self._count_retry, **kw)
+                        retry=self.retry, on_retry=self._count_retry,
+                        verify=self.verify_reads, integrity=self.integrity,
+                        on_corrupt=lambda **c: self._note_corrupt(data_id,
+                                                                  **c),
+                        **kw)
 
     # ------------------------------------------------------------- naming
     def _path(self, data_id: str) -> str:
@@ -452,6 +477,78 @@ class SafsBackend:
         except OSError:
             pass        # never created, or a straggler file — leave it
 
+    # ------------------------------------------------------------ integrity
+    def scrub_file(self, data_id: str) -> list:
+        """Verify one file's pages against its checksum block, straight
+        off the medium (the cache is bypassed on purpose — scrub checks
+        the bytes at rest). Detections are quarantined, counted and
+        emitted as `safs.corrupt` events (site "scrub"); returns the
+        corrupt page indices. Used by `safs.scrub.Scrubber`, which paces
+        whole-store passes over the prefetch pool."""
+        with self._lock:
+            pf = self._files.get(data_id)
+        if pf is None:
+            return []
+        bad = pf.verify_pages()
+        self.integrity.add(pages_scrubbed=pf.n_pages,
+                           scrub_corrupt=len(bad),
+                           crc_failures=len(bad))
+        for i in bad:
+            trace.event("safs.corrupt", site="scrub", file=pf.path, page=i)
+            with self._lock:
+                self._quarantine.add((data_id, i))
+        return bad
+
+    def quarantined(self) -> list:
+        """Pages whose corruption has been detected and not yet repaired,
+        as sorted (data_id, page) pairs."""
+        with self._lock:
+            return sorted(self._quarantine)
+
+    def repair_page(self, data_id: str, page: int, data: bytes) -> None:
+        """Overwrite one corrupt page with verified replacement bytes
+        (journaled, checksum block updated in the same commit) and lift
+        its quarantine. The caller (`safs.scrub.repair_from_checkpoint`)
+        is responsible for sourcing `data` from a *verified* snapshot."""
+        with self._lock:
+            pf = self._files[data_id]
+        pf.write_pages({int(page): data})
+        self.ns_io.add(data_id, host_bytes_written=len(data), host_writes=1)
+        # drop any cached clean copy so the next read re-fills from the
+        # repaired medium (dirty lines are newer than the snapshot — keep)
+        self.cache.invalidate(data_id, drop_dirty=False)
+        with self._lock:
+            self._quarantine.discard((data_id, int(page)))
+        self.integrity.add(pages_repaired=1)
+        trace.event("safs.repair", file=data_id, page=int(page))
+
+    def sweep_orphan_namespaces(self, *, live: Iterable[str] = (),
+                                grace_s: float = 3600.0) -> list:
+        """Startup GC for a serve root reused after a killed process:
+        per-session page subdirs that belong to no live session and have
+        not been touched for `grace_s` seconds are reclaimed (their files
+        were adopted by `_reopen`, so `drop_namespace` both closes and
+        deletes them). Age-gating spares a directory a concurrent serve
+        process just created. Returns the swept session ids."""
+        import time as _time
+        live = set(live)
+        swept = []
+        now = _time.time()
+        for d in sorted(os.listdir(self.root)):
+            p = os.path.join(self.root, d)
+            if not os.path.isdir(p):
+                continue
+            sid = urllib.parse.unquote(d)
+            if sid in live or now - os.path.getmtime(p) < grace_s:
+                continue
+            self.drop_namespace(sid)
+            if os.path.isdir(p):       # stragglers drop_namespace spared
+                import shutil
+                shutil.rmtree(p, ignore_errors=True)
+            trace.event("safs.gc_namespace", namespace=sid)
+            swept.append(sid)
+        return swept
+
     def pin(self, data_id: str) -> None:
         if self.pin_pages:
             self.cache.pin(data_id)
@@ -520,6 +617,11 @@ class SafsBackend:
             "prefetch": self.prefetcher.stats(),
             "write_behind": (self.writebehind.stats_dict()
                              if self.writebehind is not None else None),
+            # crc_failures reconciles 1:1 with safs.corrupt trace events,
+            # scrub_passes with safs.scrub (asserted by the kill-matrix
+            # tests and repro.obs.report --validate)
+            "integrity": {**self.integrity.as_dict(),
+                          "quarantined": len(self._quarantine)},
             # per-session physical splits; after a flush/drain barrier
             # their read/written byte sums reconcile exactly with "io"
             "namespaces": self.ns_io.as_dict(),
@@ -543,8 +645,8 @@ class SafsBackend:
 def make_backend(spec, **opts) -> StorageBackend:
     """Factory: 'ram', 'safs' (opts: root, page_size, cache_bytes,
     use_mmap, io_workers, readahead_depth, write_behind, wb_max_pages,
-    pin_pages, faults, retry), or pass through an already-constructed
-    backend."""
+    pin_pages, faults, retry, verify_reads), or pass through an
+    already-constructed backend."""
     if not isinstance(spec, str):
         return spec
     if spec == "ram":

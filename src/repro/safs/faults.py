@@ -90,6 +90,43 @@ class SafsIOError(OSError):
                 f"attempts={self.attempts}]")
 
 
+class CorruptPageError(SafsIOError):
+    """A page's bytes failed checksum verification and re-reads did not
+    clear the mismatch: silent corruption (media bit-rot, torn write, bad
+    transfer). Never retried by `with_retries` — the data is wrong, not
+    slow; repair happens from a verified checkpoint or the solve fails
+    typed instead of converging on garbage."""
+
+    def __init__(self, *, site: str, file: str | None = None,
+                 page: int | None = None):
+        super().__init__("page checksum mismatch", site=site, file=file,
+                         page=page, attempts=1)
+
+
+class IntegrityCounters:
+    """Thread-safe integrity counter block shared by every PageFile of a
+    backend (and its scrubber). Surfaces as `stats_dict()["integrity"]`;
+    `crc_failures` reconciles 1:1 with `safs.corrupt` trace events and
+    `scrub_passes` with `safs.scrub` events."""
+
+    FIELDS = ("pages_verified", "crc_retries", "crc_failures",
+              "scrub_passes", "pages_scrubbed", "scrub_corrupt",
+              "pages_repaired")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._c = {k: 0 for k in self.FIELDS}
+
+    def add(self, **kw) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                self._c[k] = self._c.get(k, 0) + int(v)
+
+    def as_dict(self) -> dict:
+        with self._lock:
+            return dict(self._c)
+
+
 def is_transient(err: BaseException) -> bool:
     """True for errors worth retrying: OSError with a transient errno.
     `SafsIOError` (already-exhausted retries) and `CrashPoint` are final."""
@@ -102,12 +139,17 @@ def is_transient(err: BaseException) -> bool:
 class RetryPolicy:
     """Bounded retry with exponential backoff + jitter (transient errors
     only). max_attempts counts the first try: max_attempts=1 disables
-    retrying; the default absorbs 3 consecutive transient failures."""
+    retrying; the default absorbs 3 consecutive transient failures.
+    `max_total_sleep` caps the *cumulative* backoff per operation — a
+    latency-spike fault storm cannot stack unbounded exponential sleeps
+    on the write-behind drain thread; once the budget is spent the
+    remaining attempts run back-to-back."""
     max_attempts: int = 4
     base_delay: float = 0.002      # seconds before the first retry
     multiplier: float = 2.0
     max_delay: float = 0.25
     jitter: float = 0.5            # +[0, jitter) fraction on each delay
+    max_total_sleep: float = 1.0   # cumulative sleep cap per operation
 
 
 DEFAULT_RETRY = RetryPolicy()
@@ -120,12 +162,15 @@ def with_retries(fn: Callable[[], object], policy: Optional[RetryPolicy], *,
                  on_retry: Optional[OnRetry] = None):
     """Run `fn`, retrying transient failures per `policy` (None = single
     attempt). Each retry emits a `safs.retry` trace event and calls
-    `on_retry(site=, file=, page=, attempt=, error=)`. Exhaustion raises
-    `SafsIOError` (chained); non-transient errors propagate untouched."""
+    `on_retry(site=, file=, page=, attempt=, error=, slept_ms=)`.
+    Cumulative backoff is capped at `policy.max_total_sleep` per call.
+    Exhaustion raises `SafsIOError` (chained); non-transient errors
+    propagate untouched."""
     if policy is None:
         return fn()
     delay = policy.base_delay
     attempt = 1
+    slept = 0.0
     while True:
         try:
             return fn()
@@ -136,13 +181,16 @@ def with_retries(fn: Callable[[], object], policy: Optional[RetryPolicy], *,
                 raise SafsIOError(
                     f"I/O failed after {attempt} attempts: {e}",
                     site=site, file=file, page=page, attempts=attempt) from e
+            pause = (min(delay, policy.max_delay)
+                     * (1.0 + policy.jitter * random.random()))
+            pause = max(0.0, min(pause, policy.max_total_sleep - slept))
             trace.event("safs.retry", site=site, file=file, page=page,
                         attempt=attempt, error=type(e).__name__)
             if on_retry is not None:
                 on_retry(site=site, file=file, page=page, attempt=attempt,
-                         error=e)
-            time.sleep(min(delay, policy.max_delay)
-                       * (1.0 + policy.jitter * random.random()))
+                         error=e, slept_ms=pause * 1e3)
+            time.sleep(pause)
+            slept += pause
             delay *= policy.multiplier
             attempt += 1
 
@@ -159,7 +207,14 @@ class FaultRule:
     site: exact site name or fnmatch glob ("journal.*").
     kind: "eio" (raise TransientIOError) | "crash" (raise CrashPoint) |
           "latency" (sleep `delay` seconds) | "short_read" (truncate the
-          first preadv of the chunk — exercises the short-read loop).
+          first preadv of the chunk — exercises the short-read loop) |
+          "bitflip" (silently corrupt one bit of the first page moving
+          through the site: on "pread" the corruption is in the transfer,
+          on "pwritev" it lands on the medium) | "torn_page" (on
+          "pwritev": persist only the first half of the first page — a
+          power-cut torn write). bitflip/torn_page never raise at the
+          fault site; they exist to prove the checksum layer catches what
+          the syscalls cannot.
     file_glob: optionally restrict to basenames matching this glob.
     """
     site: str
@@ -171,7 +226,8 @@ class FaultRule:
     file_glob: Optional[str] = None
 
     def __post_init__(self):
-        if self.kind not in ("eio", "crash", "latency", "short_read"):
+        if self.kind not in ("eio", "crash", "latency", "short_read",
+                             "bitflip", "torn_page"):
             raise ValueError(f"unknown fault kind {self.kind!r}")
 
 
@@ -224,8 +280,8 @@ class FaultPlan:
                         f"injected EIO at {site} (hit {k})")
                 if r.kind == "latency":
                     to_sleep = max(to_sleep, r.delay)
-                else:                       # short_read
-                    action = "short_read"
+                else:                 # short_read / bitflip / torn_page
+                    action = r.kind
         if to_sleep > 0.0:
             time.sleep(to_sleep)
         return action

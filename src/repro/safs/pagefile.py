@@ -31,19 +31,36 @@ the plan is consulted at every preadv/pwritev chunk and at the journal
 pre-commit/commit boundaries, and transient errors at those sites are
 absorbed by bounded retry with backoff (`retry=RetryPolicy(...)`,
 counted via `on_retry` and emitted as `safs.retry` trace events).
+
+Integrity: every page carries a CRC32C-style checksum in a `<file>.sums`
+sidecar block, journaled with the same crash-consistency as the data —
+the sidecar is rewritten (durably) *before* the batch's journal is
+unlinked, so any crash window in which data and checksums could disagree
+is exactly the window the journal replay already covers. `read_run` (and
+therefore every fill/miss path) verifies payloads against the block; a
+persistent mismatch raises a typed `CorruptPageError(site, file, page)`
+and emits a `safs.corrupt` trace event — silent bit-rot is detected at
+the read boundary, never served upward into Ritz vectors. A transient
+mismatch (a read racing an in-place patch, or an injected single-shot
+`bitflip` in the transfer) is healed by re-reading the page and counted
+as a `crc_retries` integrity event.
 """
 from __future__ import annotations
 
 import json
 import os
 import struct
+import threading
+import time
 import zlib
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.safs.faults import (CrashPoint, DEFAULT_RETRY, FaultPlan,
-                               OnRetry, RetryPolicy, with_retries)
+from repro.obs import trace
+from repro.safs.faults import (CorruptPageError, CrashPoint, DEFAULT_RETRY,
+                               FaultPlan, IntegrityCounters, OnRetry,
+                               RetryPolicy, with_retries)
 
 PAGE_SIZE = 4096                       # SAFS default page size (§3.4.1)
 
@@ -70,9 +87,65 @@ _JOURNAL_MAGIC = b"SAFSJRNL"
 _COMMIT = b"COMMITTD"
 _HDR = struct.Struct("<qII")           # page_index, crc32, payload_len
 
+# Checksum sidecar block: magic | algo | page_size | n_pages | u32 CRC per
+# page | crc32-of-table trailer. Rewritten atomically (tmp + rename) before
+# each batch's journal unlink, so it shares the journal's crash window.
+_SUMS_MAGIC = b"SAFSSUMS"
+_SUMS_HDR = struct.Struct("<BIQ")      # algo_id, page_size, n_pages
+
+try:                    # hardware CRC32C (Castagnoli) when the wheel exists
+    from crc32c import crc32c as _crc32c        # type: ignore
+    _CRC_ALGO = 1
+except ImportError:     # stdlib fallback — same 32-bit contract, no new dep
+    _crc32c = None
+    _CRC_ALGO = 0
+
+
+def page_crc(data) -> int:
+    """Per-page content checksum: CRC32C if the accelerated wheel is
+    importable, zlib.crc32 otherwise. The sidecar records which algorithm
+    produced it and is rebuilt (adopt-current-content) on mismatch."""
+    if _crc32c is not None:
+        return _crc32c(data)
+    return zlib.crc32(data)
+
+
+_ZERO_CRC: Dict[int, int] = {}          # page_size -> crc of an all-zero page
+
+
+def _zero_crc(page_size: int) -> int:
+    c = _ZERO_CRC.get(page_size)
+    if c is None:
+        c = _ZERO_CRC[page_size] = page_crc(b"\0" * page_size)
+    return c
+
+
+def flip_bit(path: str, page: int, *, page_size: int = PAGE_SIZE,
+             bit: int = 0) -> None:
+    """Flip one bit of one page directly on the medium — the test/smoke
+    hook for at-rest silent corruption (what a FaultRule cannot model:
+    the bytes rotted while nobody was reading or writing them)."""
+    fd = os.open(path, os.O_RDWR)
+    try:
+        off = page * page_size + bit // 8
+        b = os.pread(fd, 1, off)
+        os.pwrite(fd, bytes([b[0] ^ (1 << (bit % 8))]), off)
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _flip_payload(data: bytes) -> bytes:
+    """The injected `bitflip` action: corrupt the lowest bit of byte 0."""
+    b = bytearray(data)
+    b[0] ^= 1
+    return bytes(b)
+
+
 # CrashPoint moved to repro.safs.faults (the fault-injection layer owns the
 # error taxonomy); re-exported here for existing importers.
-__all__ = ["PAGE_SIZE", "CrashPoint", "PageFile", "coalesce_runs"]
+__all__ = ["PAGE_SIZE", "CorruptPageError", "CrashPoint", "PageFile",
+           "coalesce_runs", "flip_bit", "page_crc"]
 
 
 def _meta_path(path: str) -> str:
@@ -81,6 +154,10 @@ def _meta_path(path: str) -> str:
 
 def _journal_path(path: str) -> str:
     return path + ".journal"
+
+
+def _sums_path(path: str) -> str:
+    return path + ".sums"
 
 
 class PageFile:
@@ -95,13 +172,23 @@ class PageFile:
                  use_mmap: bool = False,
                  faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = DEFAULT_RETRY,
-                 on_retry: Optional[OnRetry] = None):
+                 on_retry: Optional[OnRetry] = None,
+                 verify: bool = True,
+                 integrity: Optional[IntegrityCounters] = None,
+                 on_corrupt: Optional[OnRetry] = None):
         self.path = path
         self.page_size = int(page_size)
         self.use_mmap = use_mmap
         self.faults = faults
         self.retry = retry
         self.on_retry = on_retry
+        # verify: CRC-check every payload `read_run` returns against the
+        # sidecar block; a persistent mismatch raises CorruptPageError.
+        # integrity/on_corrupt: shared counter block + detection hook (the
+        # backend quarantines the page and splits counters per store).
+        self.verify = bool(verify)
+        self.integrity = integrity
+        self.on_corrupt = on_corrupt
         self._mmap = None
         meta = _meta_path(path)
         if os.path.exists(meta):
@@ -123,10 +210,73 @@ class PageFile:
         self.n_pages = max(1, -(-self.nbytes // self.page_size))
         flags = os.O_RDWR | os.O_CREAT
         self._fd = os.open(path, flags, 0o644)
+        fresh = os.fstat(self._fd).st_size == 0
         size = self.n_pages * self.page_size
         if os.fstat(self._fd).st_size < size:
             os.ftruncate(self._fd, size)
+        self._sums_lock = threading.Lock()
+        self._sums = self._load_sums(fresh)
         self._recover()
+
+    # -------------------------------------------------------- checksum block
+    def _load_sums(self, fresh: bool) -> List[int]:
+        """Load the sidecar checksum block; a fresh file gets zero-page
+        CRCs, a missing/invalid/foreign-algo sidecar is rebuilt from the
+        current file content (adopt — legacy stores verify from now on)."""
+        sp = _sums_path(self.path)
+        if os.path.exists(sp):
+            try:
+                with open(sp, "rb") as f:
+                    blob = f.read()
+                if (blob.startswith(_SUMS_MAGIC)
+                        and len(blob) >= len(_SUMS_MAGIC) + _SUMS_HDR.size + 4):
+                    algo, ps, n = _SUMS_HDR.unpack_from(blob,
+                                                        len(_SUMS_MAGIC))
+                    body = blob[len(_SUMS_MAGIC) + _SUMS_HDR.size:-4]
+                    (tcrc,) = struct.unpack("<I", blob[-4:])
+                    if (algo == _CRC_ALGO and ps == self.page_size
+                            and n == self.n_pages and len(body) == 4 * n
+                            and zlib.crc32(body) == tcrc):
+                        return list(np.frombuffer(body, dtype="<u4"))
+            except OSError:
+                pass
+        if fresh:
+            sums = [_zero_crc(self.page_size)] * self.n_pages
+        else:
+            sums = []
+            for i in range(self.n_pages):
+                sums.append(page_crc(
+                    os.pread(self._fd, self.page_size, i * self.page_size)))
+        self._sums = sums
+        self._store_sums()
+        return sums
+
+    def _store_sums(self) -> None:
+        """Durably rewrite the sidecar (tmp + fsync + rename). Called with
+        current in-memory sums; crash windows are covered by the journal
+        (the batch's journal is only unlinked after this persists)."""
+        sp = _sums_path(self.path)
+        body = np.asarray(self._sums, dtype="<u4").tobytes()
+        blob = (_SUMS_MAGIC
+                + _SUMS_HDR.pack(_CRC_ALGO, self.page_size, self.n_pages)
+                + body + struct.pack("<I", zlib.crc32(body)))
+        tmp = sp + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, sp)
+
+    def _sum(self, i: int) -> int:
+        with self._sums_lock:
+            return self._sums[i]
+
+    def _set_sums(self, pages: Dict[int, bytes], *, persist: bool) -> None:
+        with self._sums_lock:
+            for i, data in pages.items():
+                self._sums[i] = page_crc(data)
+        if persist:
+            self._store_sums()
 
     # ------------------------------------------------------------- raw I/O
     def read_page(self, i: int) -> bytes:
@@ -150,14 +300,81 @@ class PageFile:
         assert 0 <= start and start + count <= self.n_pages, \
             (start, count, self.n_pages)
         if self.use_mmap:
-            return [self.read_page(start + k) for k in range(count)]
-        out: List[bytes] = []
-        done = 0
-        while done < count:
-            nv = min(count - done, _IOV_MAX)   # bounds the staging buffer
-            out.extend(self._read_chunk(start + done, nv))
-            done += nv
+            out = [self.read_page(start + k) for k in range(count)]
+        else:
+            out = []
+            done = 0
+            while done < count:
+                nv = min(count - done, _IOV_MAX)  # bounds the staging buffer
+                out.extend(self._read_chunk(start + done, nv))
+                done += nv
+        if self.verify:
+            for k in range(count):
+                out[k] = self._verify_payload(start + k, out[k])
+            if self.integrity is not None:
+                self.integrity.add(pages_verified=count)
         return out
+
+    # ------------------------------------------------------- verification
+    def _reread_page(self, i: int) -> bytes:
+        """Single-page raw re-read for checksum arbitration. Consults the
+        fault plan (a persistent transfer fault keeps corrupting the
+        re-read and is therefore *detected*; a single-shot one heals)."""
+        if self.use_mmap:
+            return self.read_page(i)
+        action = None
+        if self.faults is not None:
+            action = self.faults.check("pread", file=self.path,
+                                       page=i, pages=1)
+        data = os.pread(self._fd, self.page_size, i * self.page_size)
+        return _flip_payload(data) if action == "bitflip" else data
+
+    def _verify_payload(self, i: int, data: bytes, *,
+                        site: str = "pread") -> bytes:
+        """CRC-check one payload. A mismatch is re-arbitrated by re-reading
+        the page (it may be a benign torn read racing an in-place patch,
+        or a transient transfer flip — both heal and count as
+        `crc_retries`); a persistent mismatch is silent corruption: emit
+        `safs.corrupt`, count `crc_failures`, raise typed."""
+        if page_crc(data) == self._sum(i):
+            return data
+        pause = 0.001
+        for _ in range(5):
+            time.sleep(pause)
+            pause *= 2
+            data = self._reread_page(i)
+            if page_crc(data) == self._sum(i):
+                if self.integrity is not None:
+                    self.integrity.add(crc_retries=1)
+                return data
+        trace.event("safs.corrupt", site=site, file=self.path, page=i)
+        if self.integrity is not None:
+            self.integrity.add(crc_failures=1)
+        if self.on_corrupt is not None:
+            self.on_corrupt(site=site, file=self.path, page=i)
+        raise CorruptPageError(site=site, file=self.path, page=i)
+
+    def verify_pages(self, indices: Optional[Sequence[int]] = None,
+                     *, reread: int = 2) -> List[int]:
+        """Scrub primitive: raw medium check of `indices` (default: every
+        page) against the checksum block. Never raises and never serves
+        bytes — returns the indices whose mismatch survived `reread`
+        arbitration re-reads (racing write-back heals; bit-rot persists).
+        The caller (the scrubber / backend) does the counting,
+        quarantining and event emission."""
+        bad: List[int] = []
+        for i in (range(self.n_pages) if indices is None else indices):
+            data = os.pread(self._fd, self.page_size, i * self.page_size)
+            ok = page_crc(data) == self._sum(i)
+            for _ in range(reread):
+                if ok:
+                    break
+                time.sleep(0.002)
+                data = os.pread(self._fd, self.page_size, i * self.page_size)
+                ok = page_crc(data) == self._sum(i)
+            if not ok:
+                bad.append(i)
+        return bad
 
     def _read_chunk(self, start: int, nv: int) -> List[bytes]:
         ps = self.page_size
@@ -180,7 +397,10 @@ class PageFile:
                     raise IOError(
                         f"short preadv at page {start + got // ps}")
                 got += n
-            return [bytes(mv[k * ps:(k + 1) * ps]) for k in range(nv)]
+            out = [bytes(mv[k * ps:(k + 1) * ps]) for k in range(nv)]
+            if action == "bitflip":    # corruption in the transfer: the
+                out[0] = _flip_payload(out[0])   # checksum layer's problem
+            return out
 
         return with_retries(attempt, self.retry, site="pread",
                             file=self.path, page=start,
@@ -250,6 +470,10 @@ class PageFile:
         else:
             written = self._pwritev_runs(pages)
         self.sync()
+        # checksum block BEFORE the journal unlink: a crash anywhere in
+        # between replays the journal on reopen, which re-derives exactly
+        # these sums — data and checksums can never durably disagree
+        self._set_sums(pages, persist=True)
         try:
             os.unlink(jp)
         except FileNotFoundError:
@@ -278,12 +502,24 @@ class PageFile:
     def _write_chunk(self, pages: Dict[int, bytes], start: int,
                      nv: int) -> int:
         def attempt() -> int:
-            self._fault("pwritev", page=start, pages=nv)
+            action = self._fault("pwritev", page=start, pages=nv)
             bufs = [pages[start + k] for k in range(nv)]
             for b in bufs:             # offsets assume full pages
                 assert len(b) == self.page_size, len(b)
             off = start * self.page_size
             want = nv * self.page_size
+            if action == "bitflip":
+                # silent media corruption: flipped bits land on disk while
+                # the checksum block keeps the intended CRC — every later
+                # read/scrub of this page detects the mismatch
+                bufs = [_flip_payload(bufs[0])] + bufs[1:]
+            elif action == "torn_page":
+                # power-cut torn write: only the first half of the first
+                # page persists; the rest of the chunk lands normally
+                os.pwrite(self._fd, bufs[0][:self.page_size // 2], off)
+                if nv > 1:
+                    os.pwritev(self._fd, bufs[1:], off + self.page_size)
+                return want
             got = os.pwritev(self._fd, bufs, off)
             while got < want:          # short write: retry the remainder
                 flat = b"".join(bufs)
@@ -310,6 +546,7 @@ class PageFile:
         if ok:
             off = len(_JOURNAL_MAGIC)
             end = len(blob) - len(_COMMIT)
+            replayed: Dict[int, bytes] = {}
             while off < end:
                 i, crc, n = _HDR.unpack_from(blob, off)
                 off += _HDR.size
@@ -319,7 +556,10 @@ class PageFile:
                     ok = False
                     break
                 self._write_page_raw(i, data)
+                replayed[i] = data
             self.sync()
+            if replayed:   # re-derive the sums the interrupted batch meant
+                self._set_sums(replayed, persist=True)
         try:
             os.unlink(jp)
         except FileNotFoundError:
@@ -363,6 +603,7 @@ class PageFile:
 
     def delete(self) -> None:
         self.close()
-        for p in (self.path, _meta_path(self.path), _journal_path(self.path)):
+        for p in (self.path, _meta_path(self.path), _journal_path(self.path),
+                  _sums_path(self.path), _sums_path(self.path) + ".tmp"):
             if os.path.exists(p):
                 os.unlink(p)

@@ -78,12 +78,14 @@ class Prefetcher:
         self._pending: Deque[str] = deque()
         self._done: Dict[str, threading.Event] = {}
         self._errors: Dict[str, BaseException] = {}
+        self._tasks: Dict[str, Callable[[], int]] = {}
         self._shutdown = False
         self.busy_seconds = 0.0
         self.wait_seconds = 0.0
         self.bytes_prefetched = 0
         self.files_prefetched = 0
         self.files_dropped = 0      # offered past the readahead window
+        self.tasks_run = 0          # generic pool tasks (scrub verifies)
         self.read_errors = 0
         self._threads = [threading.Thread(target=self._run, daemon=True,
                                           name=f"safs-ra-{i}")
@@ -101,13 +103,14 @@ class Prefetcher:
                     return
                 data_id = self._pending.popleft()
                 ev = self._done.get(data_id)
+                task = self._tasks.pop(data_id, None)
             t0 = time.perf_counter()
             err: Optional[BaseException] = None
             n = 0
             for attempt in range(self.retries + 1):
                 err = None
                 try:
-                    n = self._reader(data_id)
+                    n = task() if task is not None else self._reader(data_id)
                     break
                 except BaseException as e:  # captured, re-raised at wait()
                     err = e
@@ -126,12 +129,15 @@ class Prefetcher:
             dt = time.perf_counter() - t0
             with self._lock:
                 self.busy_seconds += dt
-                if err is None:
-                    self.bytes_prefetched += n
-                    self.files_prefetched += 1
-                else:
+                if err is not None:
                     self._errors[data_id] = err
                     self.read_errors += 1
+                elif task is not None:
+                    self.tasks_run += 1   # pool tasks don't skew the
+                    #                       prefetch byte/file gauges
+                else:
+                    self.bytes_prefetched += n
+                    self.files_prefetched += 1
             if ev is not None:
                 ev.set()
 
@@ -151,6 +157,25 @@ class Prefetcher:
                 self._done[d] = threading.Event()
                 self._pending.append(d)
             self._cv.notify_all()
+
+    def submit(self, key: str, fn: Callable[[], int]) -> bool:
+        """Run an arbitrary zero-arg callable on the reader pool — the
+        scrubber's paced verify passes share the prefetch workers instead
+        of spawning their own. Bypasses the readahead window (the caller
+        paces itself); join with `wait(key)`, which re-raises the task's
+        exception as PrefetchError. Keys must not collide with data_ids
+        (the scrubber prefixes "scrub::"). Returns False if `key` is
+        already in flight."""
+        with self._cv:
+            ev = self._done.get(key)
+            if ev is not None and not ev.is_set():
+                return False
+            self._errors.pop(key, None)
+            self._tasks[key] = fn
+            self._done[key] = threading.Event()
+            self._pending.append(key)
+            self._cv.notify_all()
+        return True
 
     def wait(self, data_id: str, *, poll: float = 0.2) -> float:
         """Block until an in-flight prefetch of data_id completes (no-op if
@@ -206,6 +231,7 @@ class Prefetcher:
                     "bytes_prefetched": self.bytes_prefetched,
                     "files_prefetched": self.files_prefetched,
                     "files_dropped": self.files_dropped,
+                    "tasks_run": self.tasks_run,
                     "read_errors": self.read_errors,
                     "read_retries": self.read_retries,
                     "io_workers": self.io_workers,

@@ -20,6 +20,7 @@ tier-1 smoke gates on it.
 """
 from __future__ import annotations
 
+import logging
 from typing import List, Optional, Union
 
 from repro.core.tiered import TieredStore
@@ -27,6 +28,8 @@ from repro.obs import metrics as obs_metrics
 from repro.serve.arbiter import BudgetArbiter
 from repro.serve.scheduler import SolveScheduler
 from repro.serve.session import DONE, JobSpec, SolveSession
+
+log = logging.getLogger("repro.serve")
 
 
 class EigenService:
@@ -37,7 +40,10 @@ class EigenService:
                  device_budget: Optional[int] = None,
                  min_share: int = 1 << 20,
                  max_concurrent: int = 2, max_queued: int = 64,
-                 poll_interval: float = 0.01, owns_store: bool = False):
+                 poll_interval: float = 0.01, owns_store: bool = False,
+                 default_deadline_s: Optional[float] = None,
+                 deadline_grace_s: float = 2.0,
+                 orphan_grace_s: Optional[float] = 3600.0):
         self.store = store
         self.ckpt_root = ckpt_root
         self._owns_store = owns_store
@@ -46,8 +52,25 @@ class EigenService:
         self.scheduler = SolveScheduler(store, self.arbiter,
                                         max_concurrent=max_concurrent,
                                         max_queued=max_queued,
-                                        poll_interval=poll_interval)
+                                        poll_interval=poll_interval,
+                                        default_deadline_s=default_deadline_s,
+                                        deadline_grace_s=deadline_grace_s)
         self.sessions: List[SolveSession] = []
+        # Startup GC: a serve root reused after a killed process still
+        # holds the dead process's per-session page subdirs. No session
+        # is live yet, so any namespace older than the age gate is an
+        # orphan; sweeping here (not lazily) bounds disk leakage to one
+        # process lifetime. orphan_grace_s=None disables the sweep.
+        self.orphans_swept: List[str] = []
+        backend = getattr(store, "backend", None)
+        if (orphan_grace_s is not None
+                and hasattr(backend, "sweep_orphan_namespaces")):
+            self.orphans_swept = backend.sweep_orphan_namespaces(
+                grace_s=float(orphan_grace_s))
+            if self.orphans_swept:
+                log.warning("swept %d orphan namespace(s) at startup: %s",
+                            len(self.orphans_swept),
+                            ", ".join(self.orphans_swept))
         self.registry = obs_metrics.MetricsRegistry()
         self.registry.register(
             "store", lambda: obs_metrics.snapshot_store(store))
@@ -87,6 +110,7 @@ class EigenService:
             "arbiter": snap.get("arbiter"),
             "namespaces": snap.get("namespaces"),   # logical, per-session
             "backend": backend,                     # physical, shared
+            "orphans_swept": list(self.orphans_swept),
             "gauges": obs_metrics.gauges(snap.get("store") or {}),
         }
 
@@ -101,7 +125,10 @@ def build_service(*, backend: str = "ram", root: Optional[str] = None,
                   ckpt_root: Optional[str] = None,
                   max_concurrent: int = 2, max_queued: int = 64,
                   min_share: int = 1 << 20,
-                  poll_interval: float = 0.01) -> EigenService:
+                  poll_interval: float = 0.01,
+                  default_deadline_s: Optional[float] = None,
+                  deadline_grace_s: float = 2.0,
+                  orphan_grace_s: Optional[float] = 3600.0) -> EigenService:
     """Stand up the full stack from scalars (the CLI's entry point): one
     backend, one store whose device budget the arbiter will split, one
     service that owns and closes them."""
@@ -116,7 +143,10 @@ def build_service(*, backend: str = "ram", root: Optional[str] = None,
                         device_budget=device_budget, min_share=min_share,
                         max_concurrent=max_concurrent,
                         max_queued=max_queued,
-                        poll_interval=poll_interval, owns_store=True)
+                        poll_interval=poll_interval, owns_store=True,
+                        default_deadline_s=default_deadline_s,
+                        deadline_grace_s=deadline_grace_s,
+                        orphan_grace_s=orphan_grace_s)
 
 
 # ------------------------------------------------------------- validation

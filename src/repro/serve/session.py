@@ -21,6 +21,14 @@ match uninterrupted ones exactly.
 The problem itself (graph + operator) is rebuilt deterministically from the
 JobSpec seed on every run — only the solver state crosses a suspension,
 exactly like the SIGTERM path in `examples/ooc_lanczos.py`.
+
+Corruption rides the same suspend edge: a typed `CorruptPageError` /
+`CorruptSnapshotError` mid-solve moves the session to SUSPENDED (up to
+`JobSpec.max_corruption_retries` times, traced
+`serve.corruption_recovery`); the scheduler drops the namespace — the
+corrupt pages die with it — and the requeued run resumes from the last
+good checkpoint. Budget exhausted, or no checkpoint root: FAILED with
+the typed error.
 """
 from __future__ import annotations
 
@@ -32,10 +40,13 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.ckpt.checkpoint import CorruptSnapshotError
 from repro.ckpt.solver import CheckpointPolicy, SolveSuspended
 from repro.core import GraphOperator, solve
 from repro.graphs import normalized_adjacency, pack_tiles, rmat_graph
+from repro.obs import trace
 from repro.obs.progress import ConvergenceTracker
+from repro.safs.faults import CorruptPageError
 
 PENDING = "pending"
 RUNNING = "running"
@@ -89,6 +100,11 @@ class JobSpec:
     stream_image: bool = False     # spill the matrix image into the store
     preemptible: bool = True
     checkpoint_every: int = 0      # 0 = preemption-triggered snapshots only
+    deadline_s: Optional[float] = None   # job wall-clock budget (watchdog)
+    # corruption-recovery budget: how many times a CorruptPageError may be
+    # answered by abandoning the namespace and resuming from the newest
+    # VERIFIED checkpoint before the job fails typed
+    max_corruption_retries: int = 1
     options: Dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -197,6 +213,8 @@ class SolveSession:
         self.error: Optional[str] = None
         self.purity: Optional[float] = None
         self.preemptions = 0
+        self.corruption_recoveries = 0
+        self._resume_next = False      # next run() resumes from ckpt_root
         self.resumes = 0
         self.segments = 0              # run() invocations (1 + resumes)
         self.wall_s = 0.0              # solving time, summed over segments
@@ -227,7 +245,7 @@ class SolveSession:
         self.state = RUNNING
         self.guard.clear()
         self.segments += 1
-        resume = self.ckpt_root if self.preemptions > 0 else None
+        resume = self.ckpt_root if self._resume_next else None
         if resume is not None:
             self.resumes += 1
         spec = self.spec
@@ -266,7 +284,28 @@ class SolveSession:
             self.state = DONE
         except SolveSuspended:
             self.preemptions += 1
+            self._resume_next = True
             self.state = SUSPENDED
+        except (CorruptPageError, CorruptSnapshotError) as e:
+            # Corruption recovery: the detection already guaranteed no
+            # rotten bytes were served. If the retry budget allows, exit
+            # SUSPENDED — the scheduler abandons this namespace (its
+            # corrupt pages die with it) and requeues us; the next run()
+            # resumes from the newest checkpoint that VERIFIES (the
+            # resume path skips corrupt/torn snapshots), or from scratch
+            # when none does. Budget exhausted → typed failure.
+            if (self.ckpt_root is not None
+                    and self.corruption_recoveries
+                    < spec.max_corruption_retries):
+                self.corruption_recoveries += 1
+                self._resume_next = True
+                trace.event("serve.corruption_recovery", job=spec.job_id,
+                            attempt=self.corruption_recoveries,
+                            error=f"{type(e).__name__}: {e}")
+                self.state = SUSPENDED
+            else:
+                self.error = f"{type(e).__name__}: {e}"
+                self.state = FAILED
         except Exception as e:            # captured into the serve report
             self.error = f"{type(e).__name__}: {e}"
             self.state = FAILED
@@ -288,6 +327,7 @@ class SolveSession:
                             else float(last)),
             "eta_steps": self.tracker.eta_steps(),
             "preemptions": self.preemptions,
+            "corruption_recoveries": self.corruption_recoveries,
             "segments": self.segments,
         }
 
@@ -302,6 +342,7 @@ class SolveSession:
             "wall_s": self.wall_s,
             "queue_wait_s": self.queue_wait_s,
             "preemptions": self.preemptions,
+            "corruption_recoveries": self.corruption_recoveries,
             "resumes": self.resumes,
             "segments": self.segments,
             "purity": self.purity,

@@ -1,0 +1,632 @@
+"""End-to-end data integrity: checksums, corruption repair, self-healing.
+
+The contract under test, from the storage layer up to the serve loop:
+**seeded corruption at any read site is never served** — it is either
+healed (transient transfer flip / torn-read race), repaired from a
+*verified* checkpoint snapshot, or surfaced as a typed error — and every
+detection, scrub pass and repair is counted AND trace-announced exactly
+once (byte-exact counter ↔ event reconciliation).
+
+Layers:
+  * PageFile checksum sidecar — detect at-rest bitflips, heal transient
+    transfer flips, persist sums across the journal's crash windows;
+  * seeded `bitflip`/`torn_page` FaultRules — persistent medium faults
+    detected on the next read, never returned to the caller;
+  * the kill matrix — corruption × {steady-state read, journal replay,
+    checkpoint resume, scrub} (satellite: detection-never-served);
+  * scrub + repair_from_checkpoint — quarantine, re-fill from the newest
+    snapshot that verifies, byte-identical content after repair;
+  * checkpoint fallback — `latest`-step resume skips corrupt/torn
+    snapshots down to the next older verified step;
+  * serve — corruption recovery bounded by the JobSpec retry budget, the
+    watchdog deadline (suspend → abandon), the crashed-worker reap fix,
+    and the startup orphan-namespace GC;
+  * `RetryPolicy.max_total_sleep` — cumulative backoff capped per op.
+"""
+import json
+import os
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import GraphOperator, TieredStore
+from repro.core.solver import solve
+from repro.ckpt import checkpoint as ck
+from repro.ckpt.solver import CheckpointPolicy
+from repro.graphs import normalized_adjacency, pack_tiles, rmat_graph
+from repro.obs import trace as obs_trace
+from repro.obs import report as obs_report
+from repro.safs import (CorruptPageError, FaultPlan, FaultRule, PageFile,
+                        RetryPolicy, SafsBackend, Scrubber, TransientIOError,
+                        flip_bit, newest_verified_step, page_crc,
+                        repair_from_checkpoint, with_retries)
+from repro.safs.scrub import main as scrub_main
+
+FAST_RETRY = RetryPolicy(max_attempts=3, base_delay=1e-4, max_delay=1e-3)
+
+
+# ---------------------------------------------------------------- helpers
+def _tracer():
+    return obs_trace.install(obs_trace.Tracer())
+
+
+def _events(tr, name):
+    return [r for r in tr.records()
+            if r["type"] == "event" and r["name"] == name]
+
+
+def _reconciled(tr, backend):
+    """crc_failures ↔ safs.corrupt, scrub_passes ↔ safs.scrub,
+    pages_repaired ↔ safs.repair must pair EXACTLY."""
+    integ = backend.stats_dict()["integrity"]
+    assert integ["crc_failures"] == len(_events(tr, "safs.corrupt"))
+    assert integ["scrub_passes"] == len(_events(tr, "safs.scrub"))
+    assert integ["pages_repaired"] == len(_events(tr, "safs.repair"))
+    return integ
+
+
+def _backend(root, **kw):
+    kw.setdefault("write_behind", False)
+    kw.setdefault("retry", FAST_RETRY)
+    return SafsBackend(root, **kw)
+
+
+def _fill(backend, name="a", n=3000, seed=0):
+    arr = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    backend.store(name, arr)
+    backend.flush()
+    return arr
+
+
+def _small_graph_op():
+    n = 400
+    r, c, v = rmat_graph(n, 4000, seed=5, symmetric=True)
+    r, c, v = normalized_adjacency(n, r, c, v)
+    return GraphOperator(pack_tiles(n, n, r, c, v, block_shape=(64, 64),
+                                    min_block_nnz=4), impl="ref")
+
+
+def _safs_store(root, *, plan=None, **opts):
+    return TieredStore(backend="safs", backend_opts={
+        "root": root, "cache_bytes": 1 << 18, "write_behind": False,
+        "faults": plan, "retry": FAST_RETRY, **opts})
+
+
+# ====================================================== checksum sidecar
+@pytest.mark.disk
+def test_sums_sidecar_roundtrip_and_legacy_adopt(disk_tmp):
+    path = os.path.join(disk_tmp, "a.pages")
+    arr = np.arange(4000, dtype=np.float32)
+    pf = PageFile(path, shape=arr.shape, dtype="float32")
+    pf.write_pages(pf.split(arr))
+    pf.close()
+    assert os.path.exists(path + ".sums")
+    # cold reopen loads the sidecar and every page verifies
+    pf2 = PageFile(path)
+    assert pf2.verify_pages() == []
+    np.testing.assert_array_equal(
+        pf2.assemble(pf2.read_pages_batch(pf2.page_indices())), arr)
+    pf2.close()
+    # legacy store (no sidecar): adopt current content, then verify
+    os.unlink(path + ".sums")
+    pf3 = PageFile(path)
+    assert os.path.exists(path + ".sums")
+    np.testing.assert_array_equal(
+        pf3.assemble(pf3.read_pages_batch(pf3.page_indices())), arr)
+    pf3.delete()
+    assert not os.path.exists(path + ".sums")
+
+
+@pytest.mark.disk
+def test_journal_replay_rederives_sums(disk_tmp):
+    """Crash mid-patch AFTER the journal committed: replay rewrites the
+    pages AND re-derives their checksums — the recovered file verifies
+    clean and serves the NEW content (the sidecar's crash window is
+    exactly the journal's replay window)."""
+    from repro.safs import CrashPoint
+    path = os.path.join(disk_tmp, "j.pages")
+    old = np.zeros((64, 64), np.float32)
+    new = np.full((64, 64), 7.0, np.float32)
+    pf = PageFile(path, shape=old.shape, dtype="float32")
+    pf.write_pages(pf.split(old))
+    with pytest.raises(CrashPoint):
+        pf.write_pages(pf.split(new), crash_after_pages=1)
+    pf.close()
+    pf2 = PageFile(path)           # recovery replays, sums re-derived
+    assert pf2.verify_pages() == []
+    got = pf2.assemble(pf2.read_pages_batch(pf2.page_indices()))
+    np.testing.assert_array_equal(got, new)
+    pf2.close()
+
+
+# ================================ kill matrix: corruption at every read site
+@pytest.mark.disk
+def test_steady_read_bitflip_detected_never_served(disk_tmp):
+    """At-rest flip under a cold cache: the backend read path raises
+    typed instead of returning rotten bytes, and the detection is
+    counted + announced exactly once."""
+    tr = _tracer()
+    try:
+        root = os.path.join(disk_tmp, "pages")
+        b = _backend(root)
+        _fill(b, "a")
+        b.close()
+        flip_bit(os.path.join(root, "a.pages"), 1)
+        b2 = _backend(root)        # cold cache: reads hit the medium
+        with pytest.raises(CorruptPageError) as ei:
+            b2.load("a")
+        assert ei.value.site == "pread" and ei.value.page == 1
+        assert b2.quarantined() == [("a", 1)]
+        integ = _reconciled(tr, b2)
+        assert integ["crc_failures"] == 1
+        b2.close()
+    finally:
+        obs_trace.uninstall()
+
+
+@pytest.mark.disk
+def test_transient_transfer_bitflip_heals(disk_tmp):
+    """A single-shot seeded transfer flip (bad DMA, not bad medium) is
+    healed by re-read arbitration: correct data served, crc_retries
+    counted, NO corruption event."""
+    tr = _tracer()
+    try:
+        root = os.path.join(disk_tmp, "pages")
+        arr = _fill(_b0 := _backend(root), "a")
+        _b0.close()
+        plan = FaultPlan([FaultRule(site="pread", kind="bitflip", times=1)])
+        b = _backend(root, faults=plan)
+        np.testing.assert_array_equal(b.load("a"), arr)   # served clean
+        integ = b.stats_dict()["integrity"]
+        assert integ["crc_retries"] >= 1
+        assert integ["crc_failures"] == 0
+        assert _events(tr, "safs.corrupt") == []
+        b.close()
+    finally:
+        obs_trace.uninstall()
+
+
+@pytest.mark.disk
+@pytest.mark.parametrize("kind", ["bitflip", "torn_page"])
+def test_persistent_write_fault_detected_on_read(disk_tmp, kind):
+    """Seeded medium corruption at the pwritev site (flipped bit /
+    half-persisted page): the NEXT cold read detects it — the write
+    itself cannot (the rot is on the platter), but the checksum block
+    carries the intended content's CRC."""
+    tr = _tracer()
+    try:
+        root = os.path.join(disk_tmp, "pages")
+        plan = FaultPlan([FaultRule(site="pwritev", kind=kind, at=1,
+                                    times=1)])
+        b = _backend(root, faults=plan)
+        _fill(b, "a")
+        b.close()                  # drops the clean cached copies
+        b2 = _backend(root)
+        with pytest.raises(CorruptPageError):
+            b2.load("a")
+        integ = _reconciled(tr, b2)
+        assert integ["crc_failures"] >= 1
+        b2.close()
+    finally:
+        obs_trace.uninstall()
+
+
+@pytest.mark.disk
+def test_scrub_detects_repairs_and_reconciles(disk_tmp):
+    """Scrub site of the matrix: at-rest flip under a page nobody reads →
+    the paced pass (on the prefetch pool) quarantines it, repair re-fills
+    byte-identically from the verified snapshot, a second pass is clean,
+    and counters reconcile with events to the unit."""
+    tr = _tracer()
+    try:
+        root = os.path.join(disk_tmp, "pages")
+        ckroot = os.path.join(disk_tmp, "ck")
+        b = _backend(root, enable_prefetch=True)
+        arr = _fill(b, "a")
+        st = types.SimpleNamespace(backend=b)
+        ck.save_safs(ckroot, 1, st, extra={})
+        flip_bit(b._files["a"].path, 1)
+
+        sc = Scrubber(b, use_pool=True)
+        s1 = sc.run_once()
+        assert s1["corrupt"] == [("a", 1)]
+        assert b.quarantined() == [("a", 1)]
+        assert b.prefetcher.stats()["tasks_run"] >= 1   # pool, not ad-hoc
+
+        rep = repair_from_checkpoint(b, ckroot)
+        assert rep["repaired"] == [("a", 1)] and not rep["unrepaired"]
+        assert sc.run_once()["corrupt"] == [] and not b.quarantined()
+        np.testing.assert_array_equal(b.load("a"), arr)  # byte-identical
+
+        integ = _reconciled(tr, b)
+        assert integ["scrub_passes"] == 2
+        assert integ["scrub_corrupt"] == integ["crc_failures"] == 1
+        assert integ["pages_repaired"] == 1
+        b.close()
+    finally:
+        obs_trace.uninstall()
+
+
+@pytest.mark.disk
+def test_repair_without_covering_snapshot_stays_quarantined(disk_tmp):
+    root = os.path.join(disk_tmp, "pages")
+    b = _backend(root)
+    _fill(b, "a")
+    flip_bit(b._files["a"].path, 0)
+    assert b.scrub_file("a") == [0]
+    rep = repair_from_checkpoint(b, os.path.join(disk_tmp, "no_ck"))
+    assert rep["step"] is None and rep["unrepaired"] == [("a", 0)]
+    assert b.quarantined() == [("a", 0)]       # never silently cleared
+    b.close()
+
+
+@pytest.mark.disk
+def test_ckpt_resume_falls_back_past_corrupt_snapshot(disk_tmp):
+    """Checkpoint-resume site of the matrix: the newest snapshot is
+    corrupt/torn → resume must fall back to the next older step that
+    VERIFIES, and the resumed spectrum still matches the uninterrupted
+    run at rtol 1e-5."""
+    tr = _tracer()
+    try:
+        ref = solve(_small_graph_op(), 4, method="krylov_schur", tol=1e-6,
+                    max_iters=100, impl="ref",
+                    store=_safs_store(os.path.join(disk_tmp, "ref")))
+        assert ref.converged
+
+        ck_root = os.path.join(disk_tmp, "ck")
+        full = solve(_small_graph_op(), 4, method="krylov_schur", tol=1e-6,
+                     max_iters=100, impl="ref",
+                     store=_safs_store(os.path.join(disk_tmp, "s")),
+                     checkpoint=CheckpointPolicy(root=ck_root,
+                                                 every_restarts=1, keep=3))
+        steps = ck.valid_steps(os.path.join(ck_root, "state"))
+        assert len(steps) >= 2, "need two committed steps for the fallback"
+        newest = steps[-1]
+        snap = os.path.join(ck_root, "pages", f"step_{newest:010d}")
+        victim = sorted(f for f in os.listdir(snap)
+                        if f.endswith(".pages"))[0]
+        flip_bit(os.path.join(snap, victim), 0)
+        assert ck.verify_safs_snapshot(snap)    # hash check sees the rot
+
+        resumed = solve(_small_graph_op(), 4, method="krylov_schur",
+                        tol=1e-6, max_iters=100, impl="ref",
+                        store=_safs_store(os.path.join(disk_tmp, "f")),
+                        resume=ck_root)
+        assert resumed.resumed_step == steps[-2]      # fell back one step
+        assert [e["args"]["step"]
+                for e in _events(tr, "ckpt.corrupt_snapshot")] == [newest]
+        assert resumed.converged
+        np.testing.assert_allclose(np.sort(resumed.eigenvalues),
+                                   np.sort(ref.eigenvalues), rtol=1e-5)
+        assert resumed.n_restarts <= full.n_restarts + 1
+    finally:
+        obs_trace.uninstall()
+
+
+@pytest.mark.disk
+def test_restore_safs_refuses_corrupt_snapshot(disk_tmp):
+    root = os.path.join(disk_tmp, "pages")
+    b = _backend(root)
+    _fill(b, "a")
+    st = types.SimpleNamespace(backend=b)
+    ck.save_safs(os.path.join(disk_tmp, "ck"), 1, st, extra={})
+    b.close()
+    snap = os.path.join(disk_tmp, "ck", "step_0000000001")
+    flip_bit(os.path.join(snap, "a.pages"), 0)
+    with pytest.raises(ck.CorruptSnapshotError):
+        ck.restore_safs(os.path.join(disk_tmp, "ck"), 1,
+                        os.path.join(disk_tmp, "dest"))
+    assert newest_verified_step(os.path.join(disk_tmp, "ck")) is None
+
+
+@pytest.mark.disk
+def test_scrub_cli_detect_and_repair(disk_tmp):
+    """The tier-1 smoke's tool: one CLI invocation verifies the store at
+    rest, repairs from the checkpoint, and exits 0 only when nothing
+    stays corrupt."""
+    root = os.path.join(disk_tmp, "pages")
+    ckroot = os.path.join(disk_tmp, "ck")
+    b = _backend(root)
+    arr = _fill(b, "a")
+    ck.save_safs(ckroot, 1, types.SimpleNamespace(backend=b), extra={})
+    b.close()
+    flip_bit(os.path.join(root, "a.pages"), 2)
+    assert scrub_main([root]) == 1                       # detect only
+    assert scrub_main([root, "--repair-from", ckroot]) == 0
+    assert scrub_main([root]) == 0                       # now clean
+    b2 = _backend(root)
+    np.testing.assert_array_equal(b2.load("a"), arr)
+    b2.close()
+
+
+# ======================================== satellite: retry-sleep budget cap
+def test_retry_sleep_capped_and_reported():
+    policy = RetryPolicy(max_attempts=50, base_delay=0.01, max_delay=10.0,
+                         multiplier=2.0, jitter=0.0, max_total_sleep=0.02)
+    slept = []
+
+    def boom():
+        raise TransientIOError("injected")
+
+    t0 = time.monotonic()
+    with pytest.raises(Exception):
+        with_retries(boom, policy, site="pread",
+                     on_retry=lambda **kw: slept.append(kw["slept_ms"]))
+    wall = time.monotonic() - t0
+    # cumulative backoff clamped to the budget, not 50 growing sleeps
+    assert sum(slept) <= policy.max_total_sleep * 1e3 + 1e-6
+    assert wall < 1.0
+    assert len(slept) == policy.max_attempts - 1
+    assert all(ms >= 0.0 for ms in slept)
+
+
+@pytest.mark.disk
+def test_backend_accounts_retry_sleep_ms(disk_tmp):
+    plan = FaultPlan([FaultRule(site="pread", kind="eio", at=1, times=1)])
+    b = _backend(os.path.join(disk_tmp, "pages"), faults=plan)
+    arr = _fill(b, "a")
+    b.cache.invalidate("a", drop_dirty=True)
+    np.testing.assert_array_equal(b.load("a"), arr)      # retried through
+    io = b.stats_dict()["io"]
+    assert io["retries"] >= 1
+    assert io["retry_sleep_ms"] > 0.0
+    b.close()
+
+
+# =========================================== satellite: orphan-namespace GC
+@pytest.mark.disk
+def test_orphan_namespace_gc_on_service_startup(disk_tmp):
+    """A serve root reused after a kill: aged per-session subdirs are
+    swept at EigenService startup; young ones and live ones survive."""
+    from repro.serve import build_service
+    root = os.path.join(disk_tmp, "pages")
+    b = _backend(root)
+    b.store("dead-job::V/b0", np.zeros(600, np.float32))
+    b.store("young-job::V/b0", np.zeros(600, np.float32))
+    b.flush()
+    b.close()
+    old = time.time() - 7200
+    os.utime(os.path.join(root, "dead-job"), (old, old))
+
+    svc = build_service(backend="safs", root=root, device_budget=4 << 20,
+                        orphan_grace_s=3600.0)
+    try:
+        assert svc.orphans_swept == ["dead-job"]
+        assert not os.path.isdir(os.path.join(root, "dead-job"))
+        assert os.path.isdir(os.path.join(root, "young-job"))
+        assert svc.report()["orphans_swept"] == ["dead-job"]
+    finally:
+        svc.close()
+
+
+# ===================================== satellite: crashed-worker accounting
+class _CrashingSession:
+    """Duck-typed session whose worker thread dies with an escaped
+    BaseException — the bug class `_reap` must account as FAILED."""
+
+    def __init__(self, jid):
+        self.spec = types.SimpleNamespace(job_id=jid, priority=0,
+                                          preemptible=True)
+        self.state = "pending"
+        self.guard = None
+        self.error = None
+        self.preemptions = 0
+
+    def mark_queued(self):
+        pass
+
+    def mark_dequeued(self):
+        pass
+
+    @property
+    def can_preempt(self):
+        return False
+
+    def progress(self):
+        return {"state": self.state}
+
+    def run(self):
+        self.state = "running"
+        raise KeyboardInterrupt("worker killed mid-solve")
+
+
+def _mini_sched(**kw):
+    from repro.serve import BudgetArbiter, SolveScheduler
+    store = TieredStore(device_budget_bytes=8 << 20)
+    arb = BudgetArbiter(store, device_budget=8 << 20)
+    return SolveScheduler(store, arb, max_concurrent=1,
+                          poll_interval=0.002, **kw)
+
+
+def test_reap_accounts_dead_worker_as_failed():
+    """Single-stepped tick(): the dead worker's session surfaces FAILED
+    with the traceback in the report, namespace + arbiter released
+    exactly once, nothing left running/pending."""
+    sched = _mini_sched()
+    s = _CrashingSession("boom")
+    sched.submit(s)
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        sched.tick()
+        if sched.completed:
+            break
+        time.sleep(0.002)
+    assert sched.completed == [s]
+    assert s.state == "failed"
+    assert "KeyboardInterrupt" in s.error      # full traceback captured
+    assert sched.worker_crashes == 1
+    assert not sched._running and not sched._pending
+    a = sched.arbiter.stats_dict()
+    assert a["admits"] == a["releases"] == 1 and not a["live_sessions"]
+    assert sched.stats_dict()["worker_crashes"] == 1
+
+
+# ================================================ tentpole: serve watchdog
+class _TimedSession:
+    """Duck-typed session with a deadline; `cooperative` decides whether
+    the guard's suspend request is honored (graceful) or ignored (hung)."""
+
+    def __init__(self, jid, *, deadline_s, cooperative):
+        from repro.serve import PreemptFlag
+        self.spec = types.SimpleNamespace(job_id=jid, priority=0,
+                                          preemptible=True,
+                                          deadline_s=deadline_s)
+        self.state = "pending"
+        self.guard = PreemptFlag()
+        self.error = None
+        self.preemptions = 0
+        self.wall_s = 0.0
+        self.cooperative = cooperative
+        self.stop = threading.Event()
+
+    def mark_queued(self):
+        pass
+
+    def mark_dequeued(self):
+        pass
+
+    @property
+    def can_preempt(self):
+        return False                 # watchdog only, no priority preempt
+
+    def progress(self):
+        return {"state": self.state}
+
+    def run(self):
+        self.state = "running"
+        while not self.stop.is_set():
+            if self.cooperative and self.guard.requested():
+                self.state = "suspended"
+                return
+            time.sleep(0.002)
+
+
+def test_watchdog_deadline_suspends_cooperative_worker():
+    """Past its deadline a cooperative job checkpoints out SUSPENDED and
+    is NOT requeued (deadline-expired suspension is terminal), freeing
+    the slot and its shares."""
+    sched = _mini_sched(deadline_grace_s=5.0)
+    s = _TimedSession("slow", deadline_s=0.05, cooperative=True)
+    sched.submit(s)
+    done = sched.drain()
+    assert done == [s] and s.state == "suspended"
+    assert sched.timeouts == 1 and sched.abandoned == 0
+    assert sched.requeues == 0                 # not resurrected
+    a = sched.arbiter.stats_dict()
+    assert a["admits"] == a["releases"] == 1
+
+
+def test_watchdog_abandons_hung_worker():
+    """A worker that ignores the suspend request past the grace is
+    abandoned: FAILED with a deadline error, shares released exactly
+    once, and drain() terminates instead of spinning forever."""
+    sched = _mini_sched(deadline_grace_s=0.05)
+    hung = _TimedSession("hung", deadline_s=0.05, cooperative=False)
+    sched.submit(hung)
+    t0 = time.monotonic()
+    done = sched.drain()
+    assert time.monotonic() - t0 < 10
+    assert done == [hung] and hung.state == "failed"
+    assert "deadline exceeded" in hung.error
+    assert sched.timeouts == 1 and sched.abandoned == 1
+    a = sched.arbiter.stats_dict()
+    assert a["admits"] == a["releases"] == 1 and not a["live_sessions"]
+    hung.stop.set()                            # let the daemon thread die
+
+
+def test_scheduler_default_deadline_applies_when_spec_has_none():
+    sched = _mini_sched(default_deadline_s=0.05, deadline_grace_s=0.05)
+    s = _TimedSession("d", deadline_s=None, cooperative=True)
+    sched.submit(s)
+    sched.drain()
+    assert s.state == "suspended" and sched.timeouts == 1
+
+
+# ====================================== tentpole: session corruption retry
+def _corrupting_session(tmp_path, budget, fail_times):
+    """Real SolveSession against a RAM store, with build_problem patched
+    to raise CorruptPageError the first `fail_times` runs — exercising
+    the recovery path without a disk solve."""
+    from repro.serve import SolveSession
+    from repro.serve.session import JobSpec
+    spec = JobSpec("c", kind="eigsh", n=120, nnz=800, nev=2, tol=1e-3,
+                   max_iters=20, max_corruption_retries=budget)
+    store = TieredStore(device_budget_bytes=8 << 20)
+    sess = SolveSession(spec, store, str(tmp_path))
+    calls = {"n": 0}
+    import repro.serve.session as sess_mod
+    real = sess_mod.build_problem
+
+    def flaky(spec_, store_):
+        calls["n"] += 1
+        if calls["n"] <= fail_times:
+            raise CorruptPageError(site="pread", file="V/b0", page=3)
+        return real(spec_, store_)
+
+    return sess, sess_mod, flaky, real
+
+
+def test_session_corruption_recovery_within_budget(tmp_path, monkeypatch):
+    tr = _tracer()
+    try:
+        sess, mod, flaky, real = _corrupting_session(tmp_path, 1, 1)
+        monkeypatch.setattr(mod, "build_problem", flaky)
+        assert sess.run() == "suspended"       # recovery, not failure
+        assert sess.corruption_recoveries == 1
+        assert sess.preemptions == 0           # distinct counters
+        assert len(_events(tr, "serve.corruption_recovery")) == 1
+        assert sess.run() == "done"            # requeued run succeeds
+        assert sess.resumes == 1               # resumed via ckpt_root
+        assert sess.report()["corruption_recoveries"] == 1
+    finally:
+        obs_trace.uninstall()
+
+
+def test_session_corruption_budget_exhausted_fails_typed(tmp_path,
+                                                         monkeypatch):
+    sess, mod, flaky, real = _corrupting_session(tmp_path, 1, 5)
+    monkeypatch.setattr(mod, "build_problem", flaky)
+    assert sess.run() == "suspended"
+    assert sess.run() == "failed"              # budget of 1 exhausted
+    assert "CorruptPageError" in sess.error
+    sess2, mod2, flaky2, _ = _corrupting_session(tmp_path / "z", 0, 5)
+    monkeypatch.setattr(mod2, "build_problem", flaky2)
+    assert sess2.run() == "failed"             # zero budget: typed at once
+    assert "CorruptPageError" in sess2.error
+
+
+# ================================== report --validate: integrity reconcile
+def _trace_records(integrity, n_corrupt, n_scrub, n_repair):
+    recs = [{"type": "meta", "schema": obs_report.SCHEMA, "unit": "us",
+             "threads": {}},
+            {"type": "span", "name": "pass.subspace", "ts": 0.0,
+             "dur": 1.0, "args": {}},
+            {"type": "metrics", "name": "solve", "ts": 1.0,
+             "data": {"end": {"backend": {"integrity": integrity}}}}]
+    for name, n in (("safs.corrupt", n_corrupt), ("safs.scrub", n_scrub),
+                    ("safs.repair", n_repair)):
+        recs += [{"type": "event", "name": name, "ts": 2.0, "args": {}}
+                 for _ in range(n)]
+    recs.append({"type": "summary", "spans": 1,
+                 "events": n_corrupt + n_scrub + n_repair,
+                 "metrics": 1, "dropped": 0})
+    return recs
+
+
+def test_report_validate_integrity_reconciliation():
+    integ = {"crc_failures": 2, "scrub_passes": 1, "pages_repaired": 2}
+    good = _trace_records(integ, 2, 1, 2)
+    assert obs_report.validate(good) == []
+    rec = obs_report.integrity_reconcile(good)
+    assert rec["exact"] and rec["lossless"]
+    bad = _trace_records(integ, 1, 1, 2)       # one detection unannounced
+    assert any("integrity accounting mismatch" in p
+               for p in obs_report.validate(bad))
+    # ram backend (integrity: None) → reconciliation is simply absent
+    none = _trace_records(None, 0, 0, 0)
+    none[2]["data"]["end"]["backend"]["integrity"] = None
+    assert obs_report.integrity_reconcile(none) is None
+    assert obs_report.validate(none) == []

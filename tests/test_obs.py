@@ -235,8 +235,9 @@ def test_ram_backend_stats_dict_shape():
     store = TieredStore()
     snap = store.backend.stats_dict()
     assert set(snap) == {"io", "cache", "prefetch", "write_behind",
-                         "namespaces"}
+                         "namespaces", "integrity"}
     assert snap["cache"] is None and snap["prefetch"] is None
+    assert snap["integrity"] is None       # checksums are a safs feature
 
 
 # ------------------------------------------------------- convergence/ETA
@@ -394,7 +395,9 @@ def test_traced_solve_safs_full_timeline(small_graph, disk_tmp, tmp_path):
     snap = store.backend.stats_dict()
     store.close()
     assert set(snap) == {"io", "cache", "prefetch", "write_behind",
-                         "namespaces"}
+                         "namespaces", "integrity"}
+    assert snap["integrity"]["pages_verified"] > 0
+    assert snap["integrity"]["crc_failures"] == 0
     assert snap["prefetch"]["files_prefetched"] > 0
     assert snap["write_behind"]["pages_retired"] > 0
 
